@@ -1,0 +1,70 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+import pickle
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+MODELS = ROOT / "results" / "dwn_models"
+DRYRUN = ROOT / "results" / "dryrun"
+
+
+def load_trained(name: str):
+    """Load a trained DWN bundle produced by examples/train_jsc_dwn.py;
+    trains a quick fallback version if the pipeline has not run yet."""
+    f = MODELS / f"{name}.pkl"
+    if f.exists():
+        with open(f, "rb") as fh:
+            return pickle.load(fh)
+    # fallback: quick training so benchmarks stay runnable stand-alone
+    import jax
+    from repro.core import (JSC_PRESETS, train_dwn, freeze,
+                            eval_accuracy_hard, ptq_bitwidth_search,
+                            finetune_bitwidth_search)
+    from repro.core.warmstart import warmstart_dwn
+    from repro.data.jsc import load_jsc
+    data = load_jsc(8000, 2000)
+    cfg = JSC_PRESETS[name]
+    params = buffers = None
+    if name in ("sm-10", "sm-50"):
+        params, buffers = warmstart_dwn(jax.random.PRNGKey(0), cfg,
+                                        data.x_train, data.y_train)
+    res = train_dwn(cfg, data, epochs=4, batch=128, lr=1e-3,
+                    params=params, buffers=buffers, verbose=False)
+    acc = eval_accuracy_hard(freeze(res.params, res.buffers, cfg),
+                             data.x_test, data.y_test)
+    ptq = ptq_bitwidth_search(res.params, res.buffers, cfg, data,
+                              baseline_acc=acc, verbose=False)
+    ft = finetune_bitwidth_search(res.params, res.buffers, cfg, data,
+                                  baseline_acc=acc, start_frac=ptq.frac_bits,
+                                  epochs=2, verbose=False)
+    ft_params = ft.result.params if ft.result else res.params
+    ft_buffers = ft.result.buffers if ft.result else res.buffers
+    return {
+        "name": name, "float_acc": acc,
+        "pen_bits": ptq.total_bits, "pen_acc": ptq.accuracy,
+        "pen_sweep": ptq.sweep, "ft_bits": ft.total_bits,
+        "ft_acc": ft.accuracy, "ft_sweep": ft.sweep,
+        "frozen_ten": freeze(res.params, res.buffers, cfg),
+        "frozen_pen": freeze(res.params, res.buffers, cfg,
+                             input_frac_bits=ptq.frac_bits),
+        "frozen_ft": freeze(ft_params, ft_buffers, cfg,
+                            input_frac_bits=ft.frac_bits),
+        "_fallback": True,
+    }
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

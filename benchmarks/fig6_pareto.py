@@ -1,0 +1,53 @@
+"""Fig. 6 — Pareto frontier of LUT-based architectures on JSC
+(accuracy vs LUTs, log-x ASCII plot + frontier listing)."""
+
+from .common import load_trained, csv_row, Timer
+
+
+def run():
+    import math
+    from repro.hw.cost import dwn_hw_report
+    from repro.hw.report import PAPER_TABLE2
+
+    points = [(m, a, l) for (m, a, l, *_r) in PAPER_TABLE2
+              if not m.startswith("DWN")]
+    with Timer() as t:
+        for name in ("sm-10", "sm-50", "md-360", "lg-2400"):
+            b = load_trained(name)
+            ten = dwn_hw_report(b["frozen_ten"], variant="TEN", name=name)
+            ft = dwn_hw_report(b["frozen_ft"], variant="PEN+FT", name=name,
+                               input_bits=b["ft_bits"])
+            points.append((f"DWN-TEN({name})[ours]", 100 * b["float_acc"],
+                           ten.total_luts))
+            points.append((f"DWN-PEN+FT({name})[ours]", 100 * b["ft_acc"],
+                           ft.total_luts))
+
+    # Pareto frontier: maximize acc, minimize LUTs
+    frontier = []
+    for m, a, l in sorted(points, key=lambda p: p[2]):
+        if not frontier or a > frontier[-1][1]:
+            frontier.append((m, a, l))
+    csv_row("fig6/pareto", t.us,
+            "frontier=" + "|".join(m for m, _, _ in frontier))
+
+    print("\nPareto frontier (LUTs ascending):")
+    for m, a, l in frontier:
+        print(f"  {l:>8d} LUT  {a:5.1f}%  {m}")
+
+    # ASCII scatter
+    print("\nacc% vs log10(LUTs):")
+    for row_acc in range(78, 60, -2):
+        line = [" "] * 72
+        for m, a, l in points:
+            if row_acc <= a < row_acc + 2:
+                x = int((math.log10(max(l, 1)) - 1) / 5 * 70)
+                if 0 <= x < 72:
+                    line[x] = "D" if "ours" in m else "*"
+        print(f"{row_acc:3d} |" + "".join(line))
+    print("     " + "-" * 70)
+    print("      10       100       1k        10k       100k      1M")
+    return frontier
+
+
+if __name__ == "__main__":
+    run()

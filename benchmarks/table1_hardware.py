@@ -1,0 +1,45 @@
+"""Table I — hardware comparison of DWN-TEN and DWN-PEN+FT per model size.
+
+Prints our generator's LUT/FF/delay next to the paper's Vivado numbers
+with % error, plus the A x D product.  The TEN column exercises only the
+LUT layer + classification logic (what [13] reported); PEN+FT adds the
+thermometer encoders at the fine-tuned input bit-width.
+"""
+
+from .common import load_trained, csv_row, Timer
+
+
+def run():
+    from repro.hw.cost import dwn_hw_report
+    from repro.hw.report import PAPER_TABLE1
+
+    rows = []
+    for name in ("sm-10", "sm-50", "md-360", "lg-2400"):
+        b = load_trained(name)
+        with Timer() as t:
+            rep_ten = dwn_hw_report(b["frozen_ten"], variant="TEN",
+                                    name=name)
+            rep_ft = dwn_hw_report(b["frozen_ft"], variant="PEN+FT",
+                                   name=name, input_bits=b["ft_bits"])
+        for variant, rep in (("TEN", rep_ten), ("PEN+FT", rep_ft)):
+            paper = PAPER_TABLE1.get((name, variant), {})
+            err = (100.0 * (rep.total_luts - paper["luts"]) / paper["luts"]
+                   if paper else float("nan"))
+            rows.append((name, variant, rep, paper, err))
+            csv_row(f"table1/{name}/{variant}", t.us,
+                    f"luts={rep.total_luts};ffs={rep.total_ffs};"
+                    f"paper_luts={paper.get('luts')};err_pct={err:.1f}")
+
+    print("\n| model | variant | bits | LUT (ours) | LUT (paper) | err% "
+          "| FF (ours) | FF (paper) | delay ns (est) |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for name, variant, rep, paper, err in rows:
+        print(f"| {name} | {variant} | {rep.input_bits or '-'} "
+              f"| {rep.total_luts} | {paper.get('luts', '-')} | {err:+.1f} "
+              f"| {rep.total_ffs} | {paper.get('ffs', '-')} "
+              f"| {rep.delay_ns:.2f} |")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

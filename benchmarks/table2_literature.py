@@ -1,0 +1,38 @@
+"""Table II — comparison with LUT-based architectures on JSC.
+
+Literature rows are constants from the paper; our DWN-PEN+FT rows come
+from the trained models + our cost model.  Reproduces the paper's
+qualitative placement: DWN most efficient at the low-accuracy end,
+TreeLUT / NeuraLUT-Assemble better in the >=75% band.
+"""
+
+from .common import load_trained, csv_row, Timer
+
+
+def run():
+    from repro.hw.cost import dwn_hw_report
+    from repro.hw.report import PAPER_TABLE2
+
+    ours = []
+    for name in ("sm-10", "sm-50", "md-360", "lg-2400"):
+        b = load_trained(name)
+        with Timer() as t:
+            ft = dwn_hw_report(b["frozen_ft"], variant="PEN+FT", name=name,
+                               input_bits=b["ft_bits"])
+        ours.append((f"DWN-PEN+FT ({name}) ({b['ft_bits']}-Bit) [ours]",
+                     100 * b["ft_acc"], ft.total_luts, ft.total_ffs))
+        csv_row(f"table2/{name}", t.us,
+                f"acc={b['ft_acc']:.3f};luts={ft.total_luts}")
+
+    rows = [(m, a, l, f) for (m, a, l, f, *_rest) in PAPER_TABLE2]
+    rows += ours
+    rows.sort(key=lambda r: -r[1])
+    print("\n| model | acc % | LUT | FF |")
+    print("|---|---|---|---|")
+    for m, a, l, f in rows:
+        print(f"| {m} | {a:.1f} | {l} | {f} |")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Table III — DWN variants (TEN / PEN / PEN+FT): accuracy, LUTs, bit-width.
+
+The paper's claims under test:
+  * PTQ alone (PEN) needs wider inputs than PTQ + fine-tuning (PEN+FT);
+  * fine-tuning narrows the PEN/TEN LUT gap (sm-10: 5.30x -> 3.20x;
+    lg-2400: 3.68x -> 1.41x in the paper);
+  * accuracy is preserved through the pipeline.
+"""
+
+from .common import load_trained, csv_row, Timer
+
+
+def run():
+    from repro.hw.cost import dwn_hw_report
+    from repro.hw.report import PAPER_TABLE3
+
+    print("| model | FT acc | FT LUTs (ours) | FT bits | PEN bits | "
+          "TEN LUTs | PEN+FT/TEN (ours) | (paper) |")
+    print("|---|---|---|---|---|---|---|---|")
+    rows = []
+    for name in ("sm-10", "sm-50", "md-360", "lg-2400"):
+        b = load_trained(name)
+        with Timer() as t:
+            ten = dwn_hw_report(b["frozen_ten"], variant="TEN", name=name)
+            pen = dwn_hw_report(b["frozen_pen"], variant="PEN", name=name,
+                                input_bits=b["pen_bits"])
+            ft = dwn_hw_report(b["frozen_ft"], variant="PEN+FT", name=name,
+                               input_bits=b["ft_bits"])
+        ratio = ft.total_luts / max(ten.total_luts, 1)
+        p = PAPER_TABLE3[name]
+        paper_ratio = p["ft_luts"] / p["ten_luts"]
+        rows.append((name, b, ten, pen, ft, ratio, paper_ratio))
+        print(f"| {name} | {b['ft_acc']:.3f} | {ft.total_luts} "
+              f"| {b['ft_bits']} | {b['pen_bits']} | {ten.total_luts} "
+              f"| {ratio:.2f}x | {paper_ratio:.2f}x |")
+        csv_row(f"table3/{name}", t.us,
+                f"ft_bits={b['ft_bits']};pen_bits={b['pen_bits']};"
+                f"ratio={ratio:.2f};paper_ratio={paper_ratio:.2f}")
+
+    # claims: FT bits <= PEN bits; overhead ratio shrinks with model size
+    for name, b, ten, pen, ft, ratio, pr in rows:
+        assert b["ft_bits"] <= b["pen_bits"], (name, "FT must not widen")
+    if len(rows) >= 2:
+        assert rows[-1][5] <= rows[0][5] + 1e-9, \
+            "encoder overhead ratio should shrink for larger models"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

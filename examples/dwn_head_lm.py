@@ -1,0 +1,96 @@
+"""Beyond-paper demo: a thermometer-encoded DWN classification head on an
+LM backbone (the --dwn-head feature from DESIGN.md §6).
+
+A reduced qwen3 backbone produces pooled features for a 5-way sequence-
+classification task; the head is the paper's pipeline — thermometer encode
+-> learnable-mapping LUT layer -> popcount — trained end-to-end with EFD
+gradients flowing into the (frozen) backbone features.
+
+Run:  PYTHONPATH=src python examples/dwn_head_lm.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.classifier import cross_entropy, group_popcount, predict
+from repro.core.lut_layer import (LUTLayerSpec, init_lut_layer,
+                                  lut_layer_apply)
+from repro.models import api
+from repro.optim.adam import Adam
+
+FEATS = 16          # pooled backbone features fed to the DWN head
+T_BITS = 64         # thermometer bits per feature
+NUM_LUTS = 50
+CLASSES = 5
+
+
+def main():
+    cfg = get_arch("qwen3-8b").reduced()
+    mod = api.module_for(cfg)
+    key = jax.random.PRNGKey(0)
+    backbone = mod.init_params(key, cfg, tp=1)
+
+    def features(toks):
+        logits, _, _ = mod.forward(backbone, cfg, {"tokens": toks}, tp=1)
+        # pool the final hidden logits into FEATS features
+        pooled = logits.mean(axis=1)[:, :FEATS].astype(jnp.float32)
+        return jnp.tanh(pooled * 0.3)          # squash to (-1, 1)
+
+    # sequence-classification task: the label is a fixed (teacher)
+    # projection of the backbone's pooled features — so the demo isolates
+    # what the DWN head can learn on top of a frozen backbone.
+    Wt = jax.random.normal(jax.random.PRNGKey(7), (FEATS, CLASSES)) * 2.0
+
+    def make_batch(step, B=32, S=32):
+        rng = np.random.default_rng(step)
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))
+        y = jnp.argmax(features(toks) @ Wt, axis=-1).astype(jnp.int32)
+        return toks, y
+
+    # DWN head: fixed uniform thresholds + learnable LUT layer
+    th = jnp.tile(jnp.linspace(-1, 1, T_BITS + 2)[1:-1][None], (FEATS, 1))
+    spec = LUTLayerSpec(NUM_LUTS, 6, FEATS * T_BITS)
+    head = init_lut_layer(jax.random.PRNGKey(1), spec)
+    opt = Adam(lr=5e-3, clamp=(-1, 1))
+    opt_state = opt.init(head)
+
+    @jax.jit
+    def step(head, opt_state, toks, y):
+        feats = features(toks)
+
+        def loss(h):
+            bits = (feats[:, :, None] > th[None]).astype(jnp.float32)
+            bits = bits.reshape(feats.shape[0], -1)
+            out = lut_layer_apply(h, bits)
+            counts = group_popcount(out, CLASSES)
+            return cross_entropy(counts / 0.8, y), counts
+
+        (l, counts), g = jax.value_and_grad(loss, has_aux=True)(head)
+        head, opt_state = opt.update(g, opt_state, head)
+        acc = (predict(counts) == y).mean()
+        return head, opt_state, l, acc
+
+    accs = []
+    for i in range(60):
+        toks, y = make_batch(i)
+        head, opt_state, l, acc = step(head, opt_state, toks, y)
+        accs.append(float(acc))
+        if (i + 1) % 20 == 0:
+            print(f"step {i+1:3d} loss={float(l):.3f} "
+                  f"acc(last20)={np.mean(accs[-20:]):.3f}")
+    final = np.mean(accs[-20:])
+    print(f"DWN-head accuracy {final:.3f} (chance = {1 / CLASSES:.3f})")
+    assert final > 1.2 / CLASSES, "head should beat chance"
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Batched serving example (deliverable b): prefill + decode across three
+architecture families — KV-cache attention, O(1)-state SSM, and the
+hybrid RG-LRU — through the production serving driver.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    rc = 0
+    for arch in ("qwen3-8b", "mamba2-1.3b", "recurrentgemma-2b"):
+        print(f"\n== serving {arch} (reduced) ==", flush=True)
+        rc |= serve_mod.main(["--arch", arch, "--reduced", "--batch", "4",
+                              "--prompt-len", "24", "--gen", "12"])
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

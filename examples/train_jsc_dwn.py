@@ -1,0 +1,119 @@
+"""End-to-end reproduction of the paper's training pipeline (§III).
+
+For each JSC model size (sm-10, sm-50, md-360, lg-2400):
+  1. train the float DWN (EFD + learnable mapping; the two small models
+     additionally use the documented data-driven warm start),
+  2. DWN-PEN: post-training quantization of the thermometer thresholds to
+     signed fixed point (1, n), shrinking n until baseline accuracy is
+     lost,
+  3. DWN-PEN+FT: fine-tune 10 epochs per width (Adam 1e-3, StepLR(30,0.1))
+     and keep the smallest width that recovers baseline,
+  4. freeze + save everything under results/dwn_models/ for the hardware
+     benchmarks (tables I-III, figs 5-6).
+
+Run:  PYTHONPATH=src python examples/train_jsc_dwn.py [--sizes sm-10,sm-50]
+"""
+
+import argparse
+import json
+import pickle
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.core import (JSC_PRESETS, train_dwn, freeze, eval_accuracy_hard,
+                        ptq_bitwidth_search, finetune_bitwidth_search)
+from repro.core.warmstart import warmstart_dwn
+from repro.data.jsc import load_jsc, bayes_accuracy
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dwn_models"
+
+# training recipe per size: (epochs, lr, warm-start?)
+RECIPE = {
+    "sm-10": (40, 3e-4, True),
+    "sm-50": (30, 1e-3, True),
+    "md-360": (30, 3e-3, False),
+    "lg-2400": (14, 3e-3, False),
+}
+
+
+def train_size(name: str, data, *, seed: int = 0) -> dict:
+    cfg = JSC_PRESETS[name]
+    epochs, lr, warm = RECIPE[name]
+    t0 = time.time()
+    if warm:
+        params, buffers = warmstart_dwn(
+            jax.random.PRNGKey(seed), cfg, data.x_train, data.y_train)
+    else:
+        params = buffers = None
+    res = train_dwn(cfg, data, epochs=epochs, batch=128, lr=lr, seed=seed,
+                    params=params, buffers=buffers, verbose=False)
+    frozen = freeze(res.params, res.buffers, cfg)
+    float_acc = eval_accuracy_hard(frozen, data.x_test, data.y_test)
+    print(f"[{name}] float acc={float_acc:.4f} ({time.time()-t0:.0f}s)",
+          flush=True)
+
+    # --- DWN-PEN: PTQ bit-width search ---
+    ptq = ptq_bitwidth_search(res.params, res.buffers, cfg, data,
+                              baseline_acc=float_acc, verbose=False)
+    print(f"[{name}] PEN: {ptq.total_bits}-bit acc={ptq.accuracy:.4f}",
+          flush=True)
+
+    # --- DWN-PEN+FT: fine-tune to lower widths ---
+    ft = finetune_bitwidth_search(res.params, res.buffers, cfg, data,
+                                  baseline_acc=float_acc,
+                                  start_frac=ptq.frac_bits, epochs=10,
+                                  verbose=False)
+    print(f"[{name}] PEN+FT: {ft.total_bits}-bit acc={ft.accuracy:.4f}",
+          flush=True)
+
+    ft_params = ft.result.params if ft.result else res.params
+    ft_buffers = ft.result.buffers if ft.result else res.buffers
+    out = {
+        "name": name,
+        "float_acc": float_acc,
+        "pen_bits": ptq.total_bits, "pen_acc": ptq.accuracy,
+        "pen_sweep": ptq.sweep,
+        "ft_bits": ft.total_bits, "ft_acc": ft.accuracy,
+        "ft_sweep": ft.sweep,
+        "frozen_ten": freeze(res.params, res.buffers, cfg),
+        "frozen_pen": freeze(res.params, res.buffers, cfg,
+                             input_frac_bits=ptq.frac_bits),
+        "frozen_ft": freeze(ft_params, ft_buffers, cfg,
+                            input_frac_bits=ft.frac_bits),
+        "params": jax.device_get(ft_params),
+        "buffers": jax.device_get(ft_buffers),
+    }
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="sm-10,sm-50,md-360,lg-2400")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    data = load_jsc()
+    summary = {"bayes": bayes_accuracy()}
+    print(f"surrogate Bayes ceiling: {summary['bayes']:.4f}", flush=True)
+    for name in args.sizes.split(","):
+        out = train_size(name, data, seed=args.seed)
+        with open(RESULTS / f"{name}.pkl", "wb") as f:
+            pickle.dump(out, f)
+        summary[name] = {k: out[k] for k in
+                         ("float_acc", "pen_bits", "pen_acc",
+                          "ft_bits", "ft_acc")}
+        (RESULTS / "summary.json").write_text(
+            json.dumps(summary, indent=2, default=float))
+    print(json.dumps(summary, indent=2, default=float))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from .base import ArchConfig, ShapeConfig, SHAPES, DWN_SHAPES, cell_supported
+from .registry import get_arch, list_archs, assigned_archs, register

@@ -1,0 +1,58 @@
+"""The paper's own DWN JSC models as selectable production archs.
+
+These are *extra* cells beyond the assigned 40: the paper's technique on
+the production mesh (dwn_train / dwn_serve shapes), including the fused
+serving variants used by the §Perf hillclimb.
+"""
+from .base import ArchConfig
+from .registry import register
+
+
+def _dwn(name: str, luts: int, fused: bool = False) -> ArchConfig:
+    return ArchConfig(
+        name=name + ("-fused" if fused else ""),
+        family="dwn",
+        num_layers=1,
+        d_model=16,               # JSC features
+        num_heads=0, num_kv_heads=0, d_ff=0,
+        vocab_size=5,             # JSC jet classes
+        dwn_luts=luts,
+        dwn_bits=200,
+        dwn_fused=fused,
+        source="Mecik & Kumm 2025 (this paper); [13] model sizes",
+    )
+
+
+for _m, _l in (("dwn-jsc-sm10", 10), ("dwn-jsc-sm50", 50),
+               ("dwn-jsc-md360", 360), ("dwn-jsc-lg2400", 2400)):
+    register(_dwn(_m, _l))
+    register(_dwn(_m, _l, fused=True))
+
+
+# §Perf hillclimb variants of the serving datapath (lg-2400 target cell)
+import dataclasses as _dc
+
+_BASE = _dwn("dwn-jsc-lg2400-x", 2400)
+register(_dc.replace(_BASE, name="dwn-jsc-lg2400-opt1",
+                     dwn_datapath="gather"))
+register(_dc.replace(_BASE, name="dwn-jsc-lg2400-opt2",
+                     dwn_datapath="gather", dwn_grouping="strided"))
+register(_dc.replace(_BASE, name="dwn-jsc-lg2400-opt3",
+                     dwn_datapath="gather", dwn_grouping="strided",
+                     dwn_fused=True))
+
+
+# Encoder-column pruning (the paper's future-work item (i)): only the
+# thermometer columns actually wired by the trained mapping are encoded.
+# Counts measured from the trained models (examples/train_jsc_dwn.py):
+# sm-50 uses 209/3200 distinct columns (paper's bound: "300 or fewer"),
+# md-360 uses 1237/3200.  dwn_bits is the per-feature ceiling.
+register(_dc.replace(_dwn("dwn-jsc-md360-x", 360), name="dwn-jsc-md360-pruned",
+                     dwn_bits=78, dwn_datapath="gather",
+                     dwn_grouping="strided"))
+register(_dc.replace(_dwn("dwn-jsc-sm50-x", 50), name="dwn-jsc-sm50-pruned",
+                     dwn_bits=14, dwn_datapath="gather",
+                     dwn_grouping="strided"))
+register(_dc.replace(_BASE, name="dwn-jsc-lg2400-opt4",
+                     dwn_datapath="gather", dwn_grouping="strided",
+                     dwn_bits=170))   # lg-2400: ~2700/3200 used -> 169/feature

@@ -1,0 +1,43 @@
+"""DWN classification logic: group popcount + argmax (paper Fig. 1/4).
+
+The LUT-layer output bits are partitioned into ``classes`` contiguous groups
+of ``group_size = m // classes`` bits; each group's popcount is that class's
+score. Inference takes the argmax, ties resolved toward the lower class index
+(paper §IV: "If two inputs have the same popcount value, the class with the
+lower index is selected" — ``jnp.argmax`` returns the first maximum, which
+matches). Training divides the counts by a temperature τ and applies a
+softmax cross-entropy, following [13].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def group_popcount(bits: Array, num_classes: int) -> Array:
+    """(B, m) {0,1} -> (B, classes) counts; m must divide evenly."""
+    B, m = bits.shape
+    assert m % num_classes == 0, (m, num_classes)
+    return bits.reshape(B, num_classes, m // num_classes).sum(axis=-1)
+
+
+def logits_from_counts(counts: Array, tau: float) -> Array:
+    return counts / jnp.asarray(tau, counts.dtype)
+
+
+def predict(counts: Array) -> Array:
+    """Hardware argmax semantics: first (lowest-index) maximum wins."""
+    return jnp.argmax(counts, axis=-1)
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def accuracy(counts: Array, labels: Array) -> Array:
+    return (predict(counts) == labels).astype(jnp.float32).mean()

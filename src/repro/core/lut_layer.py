@@ -1,0 +1,195 @@
+"""Differentiable LUT layer with Extended-Finite-Difference gradients.
+
+Implements the DWN LUT layer of Bacellar et al. 2024 ([13] in the paper):
+
+* each of the ``m`` LUTs has ``n`` (default 6) binary inputs selected from a
+  pool of ``C`` candidate bits by a **learnable mapping** — a score matrix
+  (m, n, C); forward uses the hard argmax selection (what the hardware
+  wires), backward relaxes it through a softmax (straight-through);
+* each LUT holds a real-valued truth table θ ∈ R^{2^n}; forward reads
+  ``θ[addr]`` at the address formed by the selected bits and binarizes with
+  sign; backward uses the **Extended Finite Difference** (EFD): the gradient
+  w.r.t. input bit *i* is the table difference between the two addresses that
+  flip bit *i*, and the gradient w.r.t. θ is routed straight-through to the
+  addressed entry.
+
+TPU-native notes (DESIGN.md §3): the hard selection is a gather in the
+forward pass (cheap) and a one-hot-matmul in the backward pass (MXU). The
+binarized inference path (``lut_eval_hard``) is the oracle mirrored by the
+Pallas kernel in ``repro.kernels.lut_eval``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LUTLayerSpec:
+    num_luts: int          # m
+    fan_in: int = 6        # n (physical LUT6)
+    num_candidates: int = 0  # C — set from the encoder / previous layer
+
+    @property
+    def table_size(self) -> int:
+        return 2 ** self.fan_in
+
+
+def init_lut_layer(key: Array, spec: LUTLayerSpec):
+    """Initialize {scores, tables}. Tables ~ U(-1,1); scores small normal."""
+    k1, k2 = jax.random.split(key)
+    scores = jax.random.normal(k1, (spec.num_luts, spec.fan_in,
+                                    spec.num_candidates), jnp.float32) * 0.01
+    tables = jax.random.uniform(k2, (spec.num_luts, spec.table_size),
+                                jnp.float32, minval=-1.0, maxval=1.0)
+    return {"scores": scores, "tables": tables}
+
+
+def _addresses(sel_bits: Array, fan_in: int) -> Array:
+    """(B, m, n) {0,1} -> (B, m) int32 address; bit i has weight 2^i."""
+    weights = (2 ** jnp.arange(fan_in, dtype=jnp.int32))
+    return jnp.sum(sel_bits.astype(jnp.int32) * weights, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Core custom-VJP op: binarized table lookup with EFD backward.
+# Inputs: sel_bits (B, m, n) in {0,1} float; tables (m, 2^n) float.
+# Output: bits (B, m) in {0,1} float.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _lut_lookup_efd(sel_bits: Array, tables: Array) -> Array:
+    fan_in = sel_bits.shape[-1]
+    addr = _addresses(sel_bits, fan_in)                      # (B, m)
+    vals = _gather_tables(tables, addr)                      # (B, m)
+    return (vals > 0.0).astype(jnp.float32)
+
+
+def _gather_tables(tables: Array, addr: Array) -> Array:
+    """tables (m, S), addr (B, m) -> (B, m) gathered real values."""
+    return jnp.take_along_axis(
+        jnp.broadcast_to(tables[None], (addr.shape[0],) + tables.shape),
+        addr[..., None], axis=-1)[..., 0]
+
+
+def _lut_lookup_fwd(sel_bits, tables):
+    fan_in = sel_bits.shape[-1]
+    addr = _addresses(sel_bits, fan_in)
+    vals = _gather_tables(tables, addr)
+    out = (vals > 0.0).astype(jnp.float32)
+    return out, (sel_bits, tables, addr)
+
+
+def _lut_lookup_bwd(res, g):
+    sel_bits, tables, addr = res
+    B, m, n = sel_bits.shape
+    S = tables.shape[-1]
+
+    # Straight-through binarize: dL/dvals = g, clipped to the linear region
+    # (standard clipped-STE; tables are kept in [-1, 1] by the optimizer).
+    vals = _gather_tables(tables, addr)
+    g_vals = g * (jnp.abs(vals) <= 1.0).astype(g.dtype)
+
+    # Gradient to tables: scatter g at (lut, addr). One-hot einsum keeps it
+    # MXU-friendly and avoids scatter.
+    onehot = jax.nn.one_hot(addr, S, dtype=g.dtype)          # (B, m, S)
+    d_tables = jnp.einsum("bm,bms->ms", g_vals, onehot)
+
+    # EFD gradient to each selected input bit i:
+    #   d vals / d bit_i = tables[lut, addr | 2^i] - tables[lut, addr & ~2^i]
+    bit_w = (2 ** jnp.arange(n, dtype=jnp.int32))            # (n,)
+    addr_hi = addr[..., None] | bit_w                        # (B, m, n)
+    addr_lo = addr[..., None] & (~bit_w)
+    t_hi = _gather_tables_multi(tables, addr_hi)             # (B, m, n)
+    t_lo = _gather_tables_multi(tables, addr_lo)
+    d_sel = g_vals[..., None] * (t_hi - t_lo)                # (B, m, n)
+    return d_sel, d_tables
+
+
+def _gather_tables_multi(tables: Array, addr: Array) -> Array:
+    """tables (m, S), addr (B, m, n) -> (B, m, n)."""
+    B, m, n = addr.shape
+    t = jnp.broadcast_to(tables[None], (B,) + tables.shape)  # (B, m, S)
+    return jnp.take_along_axis(t, addr, axis=-1)
+
+
+_lut_lookup_efd.defvjp(_lut_lookup_fwd, _lut_lookup_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Learnable mapping: hard argmax selection forward, softmax STE backward.
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _select_bits(bits: Array, scores: Array) -> Array:
+    """bits (B, C), scores (m, n, C) -> selected (B, m, n) via argmax."""
+    idx = jnp.argmax(scores, axis=-1)                        # (m, n)
+    return jnp.take(bits, idx.reshape(-1), axis=1).reshape(
+        bits.shape[0], *idx.shape)
+
+
+def _select_bits_fwd(bits, scores):
+    out = _select_bits(bits, scores)
+    return out, (bits, scores)
+
+
+def _select_bits_bwd(res, g):
+    bits, scores = res
+    # Soft relaxation p = softmax(scores): x_soft[b,m,n] = Σ_c p[m,n,c] b[b,c]
+    p = jax.nn.softmax(scores, axis=-1)                      # (m, n, C)
+    # dL/dbits[b,c]   = Σ_{m,n} g[b,m,n] p[m,n,c]
+    d_bits = jnp.einsum("bmn,mnc->bc", g, p)
+    # dL/dscores[m,n,c] = Σ_b g[b,m,n] p[m,n,c] (bits[b,c] - x_soft[b,m,n])
+    x_soft = jnp.einsum("mnc,bc->bmn", p, bits)
+    gb = jnp.einsum("bmn,bc->mnc", g, bits)                  # Σ_b g·bits
+    gx = jnp.einsum("bmn,bmn->mn", g, x_soft)                # Σ_b g·x_soft
+    d_scores = p * (gb - gx[..., None])
+    return d_bits, d_scores
+
+
+_select_bits.defvjp(_select_bits_fwd, _select_bits_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def lut_layer_apply(params, bits: Array) -> Array:
+    """Differentiable DWN LUT layer: (B, C) bits -> (B, m) bits."""
+    sel = _select_bits(bits, params["scores"])               # (B, m, n)
+    return _lut_lookup_efd(sel, params["tables"])            # (B, m)
+
+
+def finalize_mapping(params) -> Array:
+    """Freeze the learnable mapping to int32 wire indices (m, n)."""
+    return jnp.argmax(params["scores"], axis=-1).astype(jnp.int32)
+
+
+def binarize_tables(params) -> Array:
+    """Freeze truth tables to {0,1} int32 (m, 2^n) — the hardware LUT INIT."""
+    return (params["tables"] > 0.0).astype(jnp.int32)
+
+
+def lut_eval_hard(bits: Array, mapping_idx: Array, tables_bin: Array) -> Array:
+    """Pure inference path (the hardware semantics; Pallas-kernel oracle).
+
+    Args:
+      bits: (B, C) float or int {0,1}.
+      mapping_idx: (m, n) int32 wire indices.
+      tables_bin: (m, 2^n) int32 {0,1} truth tables.
+    Returns (B, m) float32 bits.
+    """
+    B = bits.shape[0]
+    m, n = mapping_idx.shape
+    sel = jnp.take(bits, mapping_idx.reshape(-1), axis=1).reshape(B, m, n)
+    addr = _addresses(sel, n)
+    out = jnp.take_along_axis(
+        jnp.broadcast_to(tables_bin[None], (B,) + tables_bin.shape),
+        addr[..., None], axis=-1)[..., 0]
+    return out.astype(jnp.float32)

@@ -1,0 +1,142 @@
+"""DWNModel: thermometer encoder -> LUT layer stack -> popcount classifier.
+
+Mirrors the architecture of Fig. 1 in the paper. The JSC variants used by the
+paper (single LUT layer) are provided as presets:
+
+    sm-10   m=10      sm-50   m=50
+    md-360  m=360     lg-2400 m=2400
+
+all with F=16 features, T=200 thermometer bits/feature, n=6 LUT fan-in and 5
+classes. Multi-layer stacks are supported (DWN [13] allows them); layer l+1
+draws its candidate bits from layer l's outputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .thermometer import (ThermometerSpec, encode, fit_thresholds,
+                          quantize_fixed_point)
+from .lut_layer import (LUTLayerSpec, init_lut_layer, lut_layer_apply,
+                        finalize_mapping, binarize_tables, lut_eval_hard)
+from .classifier import (group_popcount, logits_from_counts, cross_entropy,
+                         accuracy, predict)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DWNConfig:
+    num_features: int = 16
+    bits_per_feature: int = 200
+    encoding: str = "distributive"          # or "uniform"
+    lut_counts: tuple = (50,)               # per LUT layer; last must % classes == 0
+    fan_in: int = 6
+    num_classes: int = 5
+    tau: float | None = None                # softmax temperature; None = auto
+
+    @property
+    def thermometer(self) -> ThermometerSpec:
+        return ThermometerSpec(self.num_features, self.bits_per_feature,
+                               self.encoding)
+
+    @property
+    def group_size(self) -> int:
+        return self.lut_counts[-1] // self.num_classes
+
+    @property
+    def tau_value(self) -> float:
+        if self.tau is not None:
+            return self.tau
+        return max(0.3, self.group_size / 12.0)
+
+    def layer_specs(self) -> list[LUTLayerSpec]:
+        specs, C = [], self.thermometer.total_bits
+        for m in self.lut_counts:
+            specs.append(LUTLayerSpec(m, self.fan_in, C))
+            C = m
+        assert self.lut_counts[-1] % self.num_classes == 0
+        return specs
+
+
+# Paper presets (Table I / §II): name -> lut count of the single LUT layer.
+JSC_PRESETS = {
+    "sm-10": DWNConfig(lut_counts=(10,)),
+    "sm-50": DWNConfig(lut_counts=(50,)),
+    "md-360": DWNConfig(lut_counts=(360,)),
+    "lg-2400": DWNConfig(lut_counts=(2400,)),
+}
+
+# Baseline accuracies the paper holds PTQ to (§III).
+PAPER_BASELINE_ACC = {"sm-10": 0.711, "sm-50": 0.740, "md-360": 0.756,
+                      "lg-2400": 0.763}
+
+
+def init_dwn(key: Array, cfg: DWNConfig, x_train: np.ndarray):
+    """Returns (params, buffers): params trainable, buffers = thresholds."""
+    thresholds = fit_thresholds(x_train, cfg.thermometer)
+    keys = jax.random.split(key, len(cfg.lut_counts))
+    layers = [init_lut_layer(k, s) for k, s in zip(keys, cfg.layer_specs())]
+    return {"layers": layers}, {"thresholds": jnp.asarray(thresholds)}
+
+
+def apply_train(params, buffers, cfg: DWNConfig, x: Array) -> Array:
+    """Differentiable forward: raw features -> class logits."""
+    bits = encode(x, buffers["thresholds"])                  # (B, F*T)
+    bits = jax.lax.stop_gradient(bits)
+    for layer in params["layers"]:
+        bits = lut_layer_apply(layer, bits)
+    counts = group_popcount(bits, cfg.num_classes)
+    return logits_from_counts(counts, cfg.tau_value)
+
+
+def loss_fn(params, buffers, cfg: DWNConfig, x: Array, y: Array):
+    logits = apply_train(params, buffers, cfg, x)
+    return cross_entropy(logits, y), logits
+
+
+@dataclasses.dataclass
+class FrozenDWN:
+    """Hardware-semantics model: what the generator emits as RTL."""
+    cfg: DWNConfig
+    thresholds: np.ndarray                   # (F, T), possibly quantized
+    mapping_idx: list                        # per layer (m, n) int32
+    tables_bin: list                         # per layer (m, 2^n) int {0,1}
+    input_frac_bits: int | None = None       # (1, n) PEN quantization, None=TEN
+
+
+def freeze(params, buffers, cfg: DWNConfig,
+           input_frac_bits: int | None = None) -> FrozenDWN:
+    mapping = [np.asarray(finalize_mapping(l)) for l in params["layers"]]
+    tables = [np.asarray(binarize_tables(l)) for l in params["layers"]]
+    th = np.asarray(buffers["thresholds"])
+    if input_frac_bits is not None:
+        th = np.asarray(quantize_fixed_point(th, input_frac_bits))
+    return FrozenDWN(cfg, th, mapping, tables, input_frac_bits)
+
+
+def apply_hard(frozen: FrozenDWN, x: Array) -> Array:
+    """Bit-exact inference path (counts). Quantizes inputs if PEN."""
+    if frozen.input_frac_bits is not None:
+        x = quantize_fixed_point(x, frozen.input_frac_bits)
+    bits = encode(x, jnp.asarray(frozen.thresholds))
+    for idx, tab in zip(frozen.mapping_idx, frozen.tables_bin):
+        bits = lut_eval_hard(bits, jnp.asarray(idx), jnp.asarray(tab))
+    return group_popcount(bits, frozen.cfg.num_classes)
+
+
+def eval_accuracy_hard(frozen: FrozenDWN, x: np.ndarray, y: np.ndarray,
+                       batch: int = 4096) -> float:
+    """Streaming hard-path accuracy (hardware semantics)."""
+    hits = 0
+    n = x.shape[0]
+    fn = jax.jit(lambda xb: predict(apply_hard(frozen, xb)))
+    for i in range(0, n, batch):
+        pred = np.asarray(fn(jnp.asarray(x[i:i + batch])))
+        hits += int((pred == y[i:i + batch]).sum())
+    return hits / n

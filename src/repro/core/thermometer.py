@@ -1,0 +1,178 @@
+"""Thermometer encoding: uniform and distributive (percentile) variants.
+
+Faithful to Mecik & Kumm §III / Bacellar et al. (ESANN 2022, [23]):
+
+* features are normalized to [-1, 1) before encoding;
+* *distributive* encoding places the T thresholds of each feature at the
+  (i+1)/(T+1) quantiles of the training distribution of that feature,
+  producing non-uniform thresholds (each one an independent comparator in
+  hardware — Fig. 3 of the paper);
+* *uniform* encoding spaces thresholds evenly over [-1, 1).
+
+The encode path is pure JAX so it is differentiable-adjacent (the bits are a
+stop-gradient boundary; thresholds are buffers, never trained) and is the
+oracle for the Pallas kernel in ``repro.kernels.thermometer``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermometerSpec:
+    """Static description of a thermometer encoder bank.
+
+    Attributes:
+      num_features: F, number of real-valued input features.
+      bits_per_feature: T, thresholds (= output bits) per feature. The paper
+        uses T=200 for JSC.
+      mode: "distributive" (percentile thresholds) or "uniform".
+    """
+
+    num_features: int
+    bits_per_feature: int
+    mode: str = "distributive"
+
+    @property
+    def total_bits(self) -> int:
+        return self.num_features * self.bits_per_feature
+
+
+def normalize_to_unit(x: np.ndarray, lo: np.ndarray | None = None,
+                      hi: np.ndarray | None = None):
+    """Affine-map features to [-1, 1) per paper §III. Returns (x, lo, hi)."""
+    x = np.asarray(x, np.float32)
+    if lo is None:
+        lo = x.min(axis=0)
+    if hi is None:
+        hi = x.max(axis=0)
+    span = np.maximum(hi - lo, 1e-12)
+    xn = (x - lo) / span * 2.0 - 1.0
+    # right-open interval [-1, 1)
+    xn = np.clip(xn, -1.0, np.nextafter(np.float32(1.0), np.float32(0.0)))
+    return xn.astype(np.float32), lo, hi
+
+
+def fit_thresholds(x_train: np.ndarray, spec: ThermometerSpec) -> np.ndarray:
+    """Fit per-feature thresholds on (already normalized) training data.
+
+    Returns float32 array of shape (F, T), ascending along T.
+    """
+    x = np.asarray(x_train, np.float32)
+    assert x.ndim == 2 and x.shape[1] == spec.num_features, x.shape
+    T = spec.bits_per_feature
+    if spec.mode == "uniform":
+        # Evenly spaced interior thresholds over [-1, 1).
+        edges = np.linspace(-1.0, 1.0, T + 2, dtype=np.float32)[1:-1]
+        th = np.tile(edges[None, :], (spec.num_features, 1))
+    elif spec.mode == "distributive":
+        qs = (np.arange(1, T + 1, dtype=np.float64)) / (T + 1)
+        th = np.quantile(x.astype(np.float64), qs, axis=0).T  # (F, T)
+    else:
+        raise ValueError(f"unknown thermometer mode: {spec.mode!r}")
+    # Ascending thresholds (quantile already is; enforce for safety).
+    th = np.sort(th.astype(np.float32), axis=1)
+    return th
+
+
+@partial(jax.jit, static_argnames=("flatten",))
+def encode(x: Array, thresholds: Array, *, flatten: bool = True) -> Array:
+    """Thermometer-encode ``x`` against fixed ``thresholds``.
+
+    Args:
+      x: (..., F) float features in [-1, 1).
+      thresholds: (F, T) ascending thresholds.
+      flatten: if True return (..., F*T), else (..., F, T).
+
+    Returns float32 bits in {0, 1}: bit t of feature f is ``x_f > th[f, t]``.
+    """
+    bits = (x[..., :, None] > thresholds).astype(jnp.float32)
+    if flatten:
+        bits = bits.reshape(*x.shape[:-1], -1)
+    return bits
+
+
+def encode_np(x: np.ndarray, thresholds: np.ndarray, flatten: bool = True):
+    """NumPy twin of :func:`encode` for data-pipeline-side preprocessing."""
+    bits = (x[..., :, None] > thresholds).astype(np.float32)
+    if flatten:
+        bits = bits.reshape(*x.shape[:-1], -1)
+    return bits
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point quantization of thresholds and inputs — the PEN path.
+# ---------------------------------------------------------------------------
+
+def quantize_fixed_point(v: Array | np.ndarray, frac_bits: int):
+    """Quantize to signed fixed point (1, n): 1 sign bit + n fractional bits.
+
+    Representable grid: {-1, -1+2^-n, ..., 1-2^-n}. Total bit-width is
+    ``1 + frac_bits`` (the paper quotes total width, e.g. "9-Bit" = (1, 8)).
+    """
+    scale = float(2 ** frac_bits)
+    lib = jnp if isinstance(v, jax.Array) else np
+    q = lib.round(v * scale) / scale
+    return lib.clip(q, -1.0, (scale - 1.0) / scale)
+
+
+def total_bits_for_frac(frac_bits: int) -> int:
+    return 1 + frac_bits
+
+
+def quantize_thresholds(thresholds, frac_bits: int):
+    """PTQ of encoder thresholds to (1, n) — paper §III.
+
+    After quantization, adjacent thresholds may collide; hardware generation
+    deduplicates them (a collided threshold is one comparator, reused), and
+    the encode() semantics are unchanged.
+    """
+    return quantize_fixed_point(thresholds, frac_bits)
+
+
+def quantize_inputs(x, frac_bits: int):
+    """Quantize the PEN input features to the same (1, n) grid."""
+    return quantize_fixed_point(x, frac_bits)
+
+
+def used_threshold_mask(mapping_idx: np.ndarray, spec: ThermometerSpec):
+    """Which encoder output bits are actually wired into the LUT layer.
+
+    Args:
+      mapping_idx: (m, n) int array of candidate-bit indices chosen by the
+        learnable mapping (finalized), indexing the flattened (F*T) bits.
+
+    Returns boolean (F, T) mask of used thresholds. Only these comparators
+    are emitted by the hardware generator (paper Fig. 3 discussion).
+    """
+    mask = np.zeros(spec.total_bits, dtype=bool)
+    flat = np.asarray(mapping_idx).reshape(-1)
+    flat = flat[(flat >= 0) & (flat < spec.total_bits)]
+    mask[flat] = True
+    return mask.reshape(spec.num_features, spec.bits_per_feature)
+
+
+def distinct_used_thresholds(thresholds: np.ndarray, mask: np.ndarray,
+                             frac_bits: int | None = None):
+    """Count distinct (feature, threshold-value) comparators after CSE.
+
+    Quantization collapses nearby thresholds onto the same fixed-point value;
+    the generator emits one comparator per distinct value per feature.
+    Returns (count, per_feature_counts).
+    """
+    th = np.asarray(thresholds)
+    if frac_bits is not None:
+        th = np.asarray(quantize_fixed_point(th, frac_bits))
+    per_feature = []
+    for f in range(th.shape[0]):
+        vals = th[f][np.asarray(mask[f], bool)]
+        per_feature.append(len(np.unique(vals)))
+    return int(np.sum(per_feature)), per_feature

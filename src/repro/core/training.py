@@ -1,0 +1,104 @@
+"""DWN training loop (paper §III protocol) — single-host reference trainer.
+
+The at-scale distributed trainer lives in ``repro.launch.train``; this module
+is the faithful reproduction path for the JSC experiments: Adam, StepLR,
+cross-entropy over τ-scaled popcounts, EFD gradients through the LUT layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import (DWNConfig, init_dwn, loss_fn, apply_train, freeze,
+                    eval_accuracy_hard)
+from .classifier import accuracy as _acc
+from .thermometer import quantize_fixed_point
+from ..data.jsc import JSCData, batches
+from ..optim.adam import Adam
+from ..optim.schedule import step_lr, constant
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: dict
+    buffers: dict
+    cfg: DWNConfig
+    history: list
+    soft_test_acc: float
+
+
+def _make_update(cfg: DWNConfig, opt: Adam, input_frac_bits: int | None):
+    @jax.jit
+    def update(params, opt_state, buffers, x, y):
+        if input_frac_bits is not None:
+            x = quantize_fixed_point(x, input_frac_bits)
+        (loss, logits), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, buffers, cfg, x, y)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss, _acc(logits, y)
+    return update
+
+
+def _make_eval(cfg: DWNConfig, input_frac_bits: int | None):
+    @jax.jit
+    def evaluate(params, buffers, x, y):
+        if input_frac_bits is not None:
+            x = quantize_fixed_point(x, input_frac_bits)
+        logits = apply_train(params, buffers, cfg, x)
+        return _acc(logits, y)
+    return evaluate
+
+
+def eval_soft(params, buffers, cfg, x, y, input_frac_bits=None,
+              batch: int = 4096) -> float:
+    ev = _make_eval(cfg, input_frac_bits)
+    accs, ns = [], []
+    for i in range(0, x.shape[0], batch):
+        xb, yb = jnp.asarray(x[i:i + batch]), jnp.asarray(y[i:i + batch])
+        accs.append(float(ev(params, buffers, xb, yb)))
+        ns.append(xb.shape[0])
+    return float(np.average(accs, weights=ns))
+
+
+def train_dwn(cfg: DWNConfig, data: JSCData, *, epochs: int = 30,
+              batch: int = 128, lr: float = 1e-3, seed: int = 0,
+              params=None, buffers=None, input_frac_bits: int | None = None,
+              sched: str = "steplr", verbose: bool = True) -> TrainResult:
+    """Train (or fine-tune, if params given) a DWN on JSC data."""
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params, buffers = init_dwn(key, cfg, data.x_train)
+    steps_per_epoch = max(1, data.x_train.shape[0] // batch)
+    schedule = (step_lr(lr, 30, 0.1, steps_per_epoch) if sched == "steplr"
+                else constant(lr))
+    # Tables clamp keeps the clipped-STE linear region meaningful.
+    opt = Adam(lr=schedule, clamp=(-1.0, 1.0))
+    opt_state = opt.init(params)
+    update = _make_update(cfg, opt, input_frac_bits)
+
+    history = []
+    for epoch in range(epochs):
+        t0 = time.time()
+        losses = []
+        for xb, yb in batches(data.x_train, data.y_train, batch,
+                              seed=seed, epoch=epoch):
+            params, opt_state, loss, acc = update(
+                params, opt_state, buffers, jnp.asarray(xb), jnp.asarray(yb))
+            losses.append(float(loss))
+        te_acc = eval_soft(params, buffers, cfg, data.x_test, data.y_test,
+                           input_frac_bits)
+        history.append({"epoch": epoch, "loss": float(np.mean(losses)),
+                        "test_acc": te_acc, "sec": time.time() - t0})
+        if verbose:
+            print(f"  epoch {epoch:3d} loss={np.mean(losses):.4f} "
+                  f"test_acc={te_acc:.4f} ({time.time()-t0:.1f}s)", flush=True)
+    return TrainResult(params, buffers, cfg, history,
+                       history[-1]["test_acc"] if history else float("nan"))

@@ -1,0 +1,118 @@
+"""Data-driven warm start for DWN training (documented training addition).
+
+The DWN learnable mapping starts from random wiring in [13].  On tasks
+whose signal is concentrated in a few dominant cuts (real JSC, and our
+surrogate by construction) the smallest models (sm-10: two LUT6 per
+class) are severely optimization-limited from a random start: SGD+EFD
+must discover ~10 informative bits out of 3,200 candidates, and early
+table noise pushes the mapping away from them.
+
+This module builds a principled warm start:
+
+* **wiring**: the LUTs of class ``c`` see (a) the top thermometer bits by
+  |corr| with ``1[y=c]`` (distinct features, near-duplicate thresholds
+  suppressed) and (b) the top bit of *each other class* — so a LUT can
+  realize "my class fires and the others don't", which is what the
+  popcount/argmax head needs;
+* **tables**: the empirical majority vote  P(y=c | address) > P(y=c)
+  per truth-table entry (the Bayes-optimal boolean function for the
+  chosen wiring);
+* **scores**: biased (+`score_bias`) at the chosen wires so the learnable
+  mapping starts there but remains free to move.
+
+Gradient training (EFD + learnable mapping, unchanged) then refines both.
+EXPERIMENTS.md §Repro reports the paper-faithful random-init results
+next to the warm-started ones.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .model import DWNConfig, init_dwn
+from .thermometer import fit_thresholds, encode_np
+
+
+def bit_label_correlation(bits: np.ndarray, y: np.ndarray,
+                          num_classes: int) -> np.ndarray:
+    """(n, C_bits) bits, labels -> (C_bits, classes) |corr|-signed matrix."""
+    b = (bits - bits.mean(0)) / (bits.std(0) + 1e-9)
+    out = np.zeros((bits.shape[1], num_classes), np.float32)
+    for c in range(num_classes):
+        t = (y == c).astype(np.float32)
+        t = (t - t.mean()) / (t.std() + 1e-9)
+        out[:, c] = b.T @ t / len(y)
+    return out
+
+
+def _top_bits(corr_c: np.ndarray, T: int, k: int, *, suppress: int = 20,
+              max_per_feature: int = 1) -> list[int]:
+    """Top-k bits by |corr|, distinct-ish: suppress near thresholds and
+    cap per-feature picks so wiring spans features."""
+    order = np.argsort(-np.abs(corr_c))
+    chosen: list[int] = []
+    taken: dict[int, list[int]] = {}
+    for cand in order:
+        f, t = int(cand // T), int(cand % T)
+        ts = taken.setdefault(f, [])
+        if len(ts) >= max_per_feature:
+            continue
+        if any(abs(t - t2) <= suppress for t2 in ts):
+            continue
+        chosen.append(int(cand))
+        ts.append(t)
+        if len(chosen) >= k:
+            break
+    return chosen
+
+
+def warmstart_dwn(key, cfg: DWNConfig, x_train: np.ndarray,
+                  y_train: np.ndarray, *, score_bias: float = 1.0,
+                  sample_cap: int = 10_000):
+    """Returns (params, buffers) warm-started for the first LUT layer."""
+    params, buffers = init_dwn(key, cfg, x_train)
+    th = np.asarray(buffers["thresholds"])
+    n_fit = min(sample_cap, x_train.shape[0])
+    bits = encode_np(x_train[:n_fit], th)
+    y = y_train[:n_fit]
+    C = cfg.num_classes
+    T = cfg.bits_per_feature
+    corr = bit_label_correlation(bits, y, C)
+
+    m, n, Cand = params["layers"][0]["scores"].shape
+    gs = m // C
+    scores = np.asarray(params["layers"][0]["scores"]).copy()
+    tables = np.asarray(params["layers"][0]["tables"]).copy()
+
+    own_bits = {c: _top_bits(corr[:, c], T, max(2 * gs, 6)) for c in range(C)}
+
+    for c in range(C):
+        for j in range(gs):
+            lut = c * gs + j
+            # cross-class bits diversify across this class's LUTs
+            others = [own_bits[o][j % len(own_bits[o])]
+                      for o in range(C) if o != c and own_bits[o]]
+            own = own_bits[c][2 * j:2 * j + 2] or own_bits[c][:2]
+            wires = (own + others)[:n]
+            while len(wires) < n:
+                wires.append(own_bits[c][len(wires) % len(own_bits[c])])
+            # scores: bias the chosen wiring
+            for i, w in enumerate(wires):
+                scores[lut, i, w] += score_bias
+            # tables: empirical majority vote at each address
+            sel = bits[:, wires]                                # (nfit, n)
+            addr = (sel.astype(np.int64)
+                    * (1 << np.arange(n))[None, :]).sum(1)
+            base = (y == c).mean()
+            tab = np.full(2 ** n, -0.5, np.float32)
+            for a in np.unique(addr):
+                mask = addr == a
+                p = (y[mask] == c).mean()
+                tab[a] = 0.5 if p > base else -0.5
+            tables[lut] = tab
+
+    params["layers"][0]["scores"] = jnp.asarray(scores)
+    params["layers"][0]["tables"] = jnp.asarray(tables)
+    return params, buffers

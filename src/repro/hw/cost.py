@@ -1,0 +1,283 @@
+"""Technology-mapped FPGA cost model (Xilinx UltraScale+ xcvu9p, LUT6).
+
+Mirrors the paper's FloPoCo-based generator structurally:
+
+* thermometer encoder  -> one constant comparator per *distinct, used*
+  (feature, threshold) pair (Fig. 3; dedup after PTQ quantization);
+* LUT layer            -> m physical LUT6 (exact);
+* popcount             -> GPC compressor tree (6:3 and 3:2 compressors,
+  3 resp. 1 LUT each, per FloPoCo's compressor-tree chapter [24]) run to
+  completion, then a final carry adder (1 LUT/bit);
+* argmax               -> pairwise comparator/mux reduction tree (Fig. 4).
+
+All constants are given explicitly below and the calibration against the
+paper's Table I TEN rows is reported by ``benchmarks/table1_hardware.py``
+(our counts next to the paper's with % error).  Fmax/FF figures are
+estimates from pipeline-register placement and logic depth and are
+labelled as such.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+# --- technology constants ---------------------------------------------------
+T_LUT_NS = 0.20          # LUT6 switching delay
+T_ROUTE_NS = 0.45        # average routed-net delay
+T_CARRY_NS = 0.05        # per CARRY8 block
+
+
+def comparator_luts(width: int) -> int:
+    """x >= const for a `width`-bit input.
+
+    width<=6 : any boolean function of <=6 inputs is exactly one LUT6.
+    Wider    : 6-bit segments produce (gt, eq) via dual-output LUT6_2;
+               the combine chain folds into one extra LUT per segment pair
+               (carry-assisted).  Net effect: ceil(width/6) + segments-1.
+    """
+    if width <= 0:
+        return 0
+    seg = math.ceil(width / 6)
+    return seg + max(0, seg - 1)
+
+
+def comparator_levels(width: int) -> int:
+    seg = math.ceil(width / 6)
+    return 1 + (0 if seg == 1 else math.ceil(math.log2(seg)))
+
+
+def two_input_comparator_luts(width: int) -> int:
+    """x > y, both `width`-bit variables: 2w inputs."""
+    if width <= 0:
+        return 0
+    seg = math.ceil(2 * width / 6)
+    return seg + max(0, seg - 1)
+
+
+def mux2_luts(width: int) -> int:
+    """2:1 mux of a `width`-bit value: sel+2 data = 3 inputs/bit; LUT6
+    packs two bits (LUT6_2)."""
+    return math.ceil(width / 2)
+
+
+# --- popcount: GPC compressor-tree simulation --------------------------------
+
+@dataclasses.dataclass
+class CompressorTreeResult:
+    luts: int
+    stages: int
+    out_bits: int
+
+
+def popcount_tree(n_bits: int) -> CompressorTreeResult:
+    """Greedy GPC schedule: per stage, cover each column with 6:3 (3 LUTs)
+    then 3:2 (1 LUT) compressors until every column has <= 2 bits, then a
+    final ripple-carry add (1 LUT/bit via CARRY8).
+
+    Returns total LUTs, compressor stages, and result width.
+    """
+    if n_bits <= 1:
+        return CompressorTreeResult(0, 0, max(n_bits, 1))
+    if n_bits <= 3:
+        # half/full adder: sum+carry are two functions of <=3 shared
+        # inputs -> one dual-output LUT6_2
+        return CompressorTreeResult(1, 1, 2)
+    if n_bits <= 6:
+        # one 6:3 compressor = the 3-bit count (3 x 6-input functions)
+        return CompressorTreeResult(3, 1, 3)
+    out_width = math.ceil(math.log2(n_bits + 1))
+    cols = [n_bits] + [0] * (out_width - 1)   # bits per column (weight 2^i)
+    luts = 0
+    stages = 0
+    while max(cols) > 2:
+        stages += 1
+        nxt = [0] * len(cols)
+        for c, h in enumerate(cols):
+            while h >= 6:
+                h -= 6
+                luts += 3
+                for d in range(3):            # 3-bit count -> cols c..c+2
+                    if c + d < len(nxt):
+                        nxt[c + d] += 1
+            while h >= 3:
+                h -= 3
+                luts += 1
+                for d in range(2):
+                    if c + d < len(nxt):
+                        nxt[c + d] += 1
+            nxt[c] += h                       # passthrough leftovers
+        cols = nxt
+    # final 2-row carry-propagate add
+    width = max(i for i, h in enumerate(cols) if h) + 1
+    luts += width
+    return CompressorTreeResult(luts, stages + 1, out_width)
+
+
+# --- component-level costs ----------------------------------------------
+
+
+@dataclasses.dataclass
+class ComponentCost:
+    luts: int
+    ffs: int
+    levels: int                # combinational logic levels
+
+    def __add__(self, o: "ComponentCost") -> "ComponentCost":
+        return ComponentCost(self.luts + o.luts, self.ffs + o.ffs,
+                             self.levels + o.levels)
+
+
+def encoder_cost(distinct_per_feature: list[int], input_bits: int,
+                 used_bits: int, *, pipeline: bool = True) -> ComponentCost:
+    """Thermometer encoder bank.
+
+    distinct_per_feature: number of *distinct used* threshold values per
+    feature after PTQ dedup (CSE); each is one constant comparator.
+    used_bits: encoder output bits actually wired to the LUT layer
+    (registered at the component boundary when pipelined).
+    """
+    n_cmp = int(sum(distinct_per_feature))
+    luts = n_cmp * comparator_luts(input_bits)
+    ffs = used_bits if pipeline else 0
+    return ComponentCost(luts, ffs, comparator_levels(input_bits))
+
+
+def lut_layer_cost(num_luts: int, *, pipeline: bool = True) -> ComponentCost:
+    return ComponentCost(num_luts, num_luts if pipeline else 0, 1)
+
+
+def popcount_cost(group_size: int, num_classes: int,
+                  *, pipeline: bool = True) -> ComponentCost:
+    tree = popcount_tree(group_size)
+    luts = tree.luts * num_classes
+    ffs = tree.out_bits * num_classes if pipeline else 0
+    return ComponentCost(luts, ffs, tree.stages)
+
+
+def argmax_cost(num_classes: int, count_bits: int,
+                *, pipeline: bool = True) -> ComponentCost:
+    """Pairwise reduction (Fig. 4): c-1 nodes of (comparator + value mux +
+    index mux); index width grows toward the root."""
+    luts = 0
+    idx_bits = 1
+    n = num_classes
+    level = 0
+    while n > 1:
+        pairs = n // 2
+        luts += pairs * (two_input_comparator_luts(count_bits)
+                         + mux2_luts(count_bits)
+                         + mux2_luts(idx_bits))
+        n = pairs + n % 2
+        idx_bits += 1
+        level += 1
+    ffs = (count_bits + math.ceil(math.log2(num_classes))) if pipeline else 0
+    lv = level * (1 + 1)          # compare + mux per tree level
+    return ComponentCost(luts, ffs, lv)
+
+
+# --- whole-accelerator reports -------------------------------------------
+
+
+@dataclasses.dataclass
+class HWReport:
+    variant: str                         # "TEN" | "PEN" | "PEN+FT"
+    model: str
+    input_bits: int | None
+    luts: dict                           # component -> LUTs
+    ffs: dict
+    levels: int
+    distinct_comparators: int = 0
+
+    @property
+    def total_luts(self) -> int:
+        return int(sum(self.luts.values()))
+
+    @property
+    def total_ffs(self) -> int:
+        return int(sum(self.ffs.values()))
+
+    @property
+    def delay_ns(self) -> float:
+        return self.levels * (T_LUT_NS + T_ROUTE_NS)
+
+    @property
+    def fmax_mhz(self) -> float:
+        # pipelined between components: critical stage = deepest component
+        return 1e3 / max(self.delay_ns / max(self.levels, 1) *  # per level
+                         self._max_stage_levels(), 0.1)
+
+    def _max_stage_levels(self) -> int:
+        return max(1, self._stage_levels)
+
+    _stage_levels: int = 1
+
+    @property
+    def area_delay(self) -> float:
+        """A x D in LUT*ns at the (pipelined) critical stage delay."""
+        return self.total_luts * (1e3 / self.fmax_mhz)
+
+
+def dwn_hw_report(frozen, *, variant: str, name: str,
+                  input_bits: int | None = None,
+                  pipeline: bool = True) -> HWReport:
+    """Full-accelerator cost for a FrozenDWN (repro.core.model).
+
+    TEN: inputs are already thermometer bits -> no encoder.
+    PEN/PEN+FT: distributive encoder at `input_bits` total width (1, n).
+    """
+    from ..core.thermometer import used_threshold_mask, distinct_used_thresholds
+    from ..core.model import DWNConfig  # noqa: F401  (type only)
+
+    cfg = frozen.cfg
+    luts: dict = {}
+    ffs: dict = {}
+    levels = 0
+    n_cmp = 0
+
+    m_final = cfg.lut_counts[-1]
+    group = m_final // cfg.num_classes
+    count_bits = math.ceil(math.log2(group + 1))
+
+    if variant != "TEN":
+        assert input_bits is not None
+        spec = cfg.thermometer
+        mask = used_threshold_mask(np.asarray(frozen.mapping_idx[0]), spec)
+        frac = input_bits - 1
+        n_cmp, per_feature = distinct_used_thresholds(
+            frozen.thresholds, mask, frac_bits=frac)
+        used_bits = int(mask.sum())
+        c = encoder_cost(per_feature, input_bits, used_bits,
+                         pipeline=pipeline)
+        luts["encoder"], ffs["encoder"] = c.luts, c.ffs
+        levels += c.levels
+        enc_levels = c.levels
+    else:
+        # inputs arrive as TEN bits; register them at the boundary
+        used = used_threshold_mask(np.asarray(frozen.mapping_idx[0]),
+                                   cfg.thermometer)
+        luts["encoder"], ffs["encoder"] = 0, int(used.sum()) if pipeline else 0
+        enc_levels = 0
+
+    lut_total = 0
+    for m in cfg.lut_counts:
+        lut_total += m
+    c = lut_layer_cost(lut_total, pipeline=pipeline)
+    luts["lut_layer"], ffs["lut_layer"] = c.luts, c.ffs
+    levels += c.levels * len(cfg.lut_counts)
+
+    c = popcount_cost(group, cfg.num_classes, pipeline=pipeline)
+    luts["popcount"], ffs["popcount"] = c.luts, c.ffs
+    pop_levels = c.levels
+    levels += c.levels
+
+    c = argmax_cost(cfg.num_classes, count_bits, pipeline=pipeline)
+    luts["argmax"], ffs["argmax"] = c.luts, c.ffs
+    levels += c.levels
+
+    rep = HWReport(variant, name, input_bits, luts, ffs, levels,
+                   distinct_comparators=n_cmp)
+    rep._stage_levels = max(enc_levels, 1, pop_levels, c.levels)
+    return rep

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the DWN hot spots the paper optimizes:
+thermometer encoding, LUT-layer evaluation, popcount/argmax — plus the
+fused whole-accelerator kernel (beyond-paper; bits never leave VMEM).
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with interpret/TPU switch + padding), ref.py (pure-jnp oracle)."""
+from . import thermometer, lut_eval, popcount, fused, flash_attn

@@ -1,0 +1,44 @@
+"""Public op wrapper for the flash-attention kernel (GQA fold + padding)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           causal: bool = True, block: int = 512,
+           interpret: bool | None = None) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, S, K, hd) with H % K == 0 (GQA).
+
+    Folds (batch, head) into the kernel's leading dim, repeating KV per
+    group; pads S to a block multiple (padded keys are masked out by
+    causality for the padded queries only, which are then sliced off).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    g = H // K
+    kr = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vr = jnp.repeat(v, g, axis=2) if g > 1 else v
+    bq = min(block, _round_up(S, 8))
+    Sp = _round_up(S, bq)
+    qt = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kt = jnp.pad(kr, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    vt = jnp.pad(vr, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    out = flash_attention(fold(qt), fold(kt), fold(vt), causal=causal,
+                          block_q=bq, block_k=bq, interpret=interpret)
+    out = out.reshape(B, H, Sp, hd).transpose(0, 2, 1, 3)
+    return out[:, :S]
+
+
+__all__ = ["attend", "attention_ref"]

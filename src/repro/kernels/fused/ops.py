@@ -1,0 +1,48 @@
+"""Public op wrapper for the fused DWN-accelerator kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..lut_eval.ref import selection_onehot
+from .kernel import fused_dwn
+from .ref import fused_dwn_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def forward(x: jax.Array, thresholds: jax.Array, mapping: jax.Array,
+            tables: jax.Array, num_classes: int, *,
+            interpret: bool | None = None) -> jax.Array:
+    """Whole-accelerator DWN inference: features -> class counts."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, F = x.shape
+    T = thresholds.shape[1]
+    m, n = mapping.shape
+    g = m // num_classes
+    Tp = _round_up(T, 128)
+    bb = min(256, _round_up(B, 8))
+    Bp = _round_up(B, bb)
+    bm = min(128, _round_up(m, 8))
+    mp = _round_up(m, bm)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+    thp = jnp.pad(thresholds, ((0, 0), (0, Tp - T)), constant_values=jnp.inf)
+    # selection over the padded bit layout (F, Tp)
+    f_of = mapping // T
+    t_of = mapping % T
+    mapping_p = f_of * Tp + t_of
+    sel = selection_onehot(mapping_p, F * Tp)
+    sel = jnp.pad(sel, ((0, 0), (0, (mp - m) * n)))
+    tabs = jnp.pad(tables.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    cls = jax.nn.one_hot(jnp.arange(m) // g, num_classes, dtype=jnp.float32)
+    cls = jnp.pad(cls, ((0, mp - m), (0, 0)))        # padded LUTs count 0
+    counts = fused_dwn(xp, thp, sel, tabs, cls, fan_in=n, block_b=bb,
+                       block_m=bm, interpret=interpret)
+    return counts[:B]
+
+
+__all__ = ["forward", "fused_dwn_ref"]

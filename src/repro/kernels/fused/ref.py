@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused DWN-accelerator kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..thermometer.ref import thermometer_ref
+from ..lut_eval.ref import lut_eval_ref
+from ..popcount.ref import popcount_ref
+
+
+def fused_dwn_ref(x: jax.Array, thresholds: jax.Array, mapping: jax.Array,
+                  tables: jax.Array, num_classes: int) -> jax.Array:
+    """x (B,F); thresholds (F,T); mapping (m,n); tables (m,2^n) ->
+    counts (B, classes).  Composition of the three stage oracles."""
+    bits = thermometer_ref(x, thresholds).reshape(x.shape[0], -1)
+    out = lut_eval_ref(bits, mapping, tables)
+    return popcount_ref(out, num_classes)

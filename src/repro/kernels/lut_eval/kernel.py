@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: DWN LUT-layer evaluation.
+
+FPGA -> TPU adaptation (DESIGN.md §3).  Two stages fused in one kernel,
+both operands resident in VMEM:
+
+  stage A (MXU): the learned sparse wiring is a gather on FPGA; on TPU we
+  recast it as a dense matmul with the one-hot selection matrix:
+      sel (B_blk, mn_blk) = bits (B_blk, C) @ onehot (C, mn_blk)
+
+  stage B (VPU): LUT read without gather — the truth-table read at a
+  binary address equals the multilinear corner expansion
+      out[b,l] = sum_a table[l,a] * prod_i (s_i if bit_i(a) else 1-s_i)
+  evaluated with 6 fused multiplies over the (B_blk, m_blk, 64) tile.
+
+Grid: (B / B_blk, m / m_blk).  The MXU matmul dims are 128-aligned by
+ops.py padding; fan_in n is a compile-time constant (6 for LUT6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_eval_kernel(bits_ref, sel_ref, tab_ref, out_ref, *, fan_in: int):
+    bits = bits_ref[...]                              # (B_blk, C)
+    sel = sel_ref[...]                                # (C, m_blk*n)
+    tab = tab_ref[...]                                # (m_blk, 2^n)
+    B_blk = bits.shape[0]
+    mn = sel.shape[1]
+    m_blk = mn // fan_in
+    A = 2 ** fan_in
+    # stage A: one-hot selection matmul (MXU)
+    s = jnp.dot(bits, sel, preferred_element_type=jnp.float32)
+    s = s.reshape(B_blk, m_blk, fan_in)
+    # stage B: corner-product table evaluation (VPU)
+    w = jnp.ones((B_blk, m_blk, A), jnp.float32)
+    for i in range(fan_in):
+        si = s[:, :, i:i + 1]                         # (B_blk, m_blk, 1)
+        corner_i = ((jnp.arange(A, dtype=jnp.int32) >> i) & 1).astype(
+            jnp.float32)                              # (A,)
+        w = w * (si * corner_i + (1.0 - si) * (1.0 - corner_i))
+    out_ref[...] = jnp.sum(w * tab[None].astype(jnp.float32), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("fan_in", "block_b", "block_m",
+                                             "interpret"))
+def lut_eval(bits: jax.Array, sel_onehot: jax.Array, tables: jax.Array, *,
+             fan_in: int = 6, block_b: int = 256, block_m: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """bits (B, C); sel_onehot (C, m*n); tables (m, 2^n) -> (B, m) f32."""
+    B, C = bits.shape
+    m = tables.shape[0]
+    A = 2 ** fan_in
+    assert sel_onehot.shape == (C, m * fan_in), sel_onehot.shape
+    bb, bm = min(block_b, B), min(block_m, m)
+    assert B % bb == 0 and m % bm == 0, (B, m, bb, bm)
+    grid = (B // bb, m // bm)
+    kernel = functools.partial(_lut_eval_kernel, fan_in=fan_in)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, C), lambda i, j: (i, 0)),
+            pl.BlockSpec((C, bm * fan_in), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, A), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, m), jnp.float32),
+        interpret=interpret,
+    )(bits, sel_onehot, tables)

@@ -1,0 +1,40 @@
+"""Public op wrapper for the LUT-eval kernel (padding + backend switch)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import lut_eval
+from .ref import lut_eval_ref, selection_onehot
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def evaluate(bits: jax.Array, mapping: jax.Array, tables: jax.Array, *,
+             interpret: bool | None = None) -> jax.Array:
+    """Hard LUT-layer inference via the Pallas kernel.
+
+    bits (B, C) {0,1}; mapping (m, n) int32; tables (m, 2^n) {0,1}.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, C = bits.shape
+    m, n = mapping.shape
+    bb = min(256, _round_up(B, 8))
+    Bp = _round_up(B, bb)
+    bm = min(128, _round_up(m, 8))
+    mp = _round_up(m, bm)
+    Cp = _round_up(C, 128)
+    sel = selection_onehot(mapping, C)                       # (C, m*n)
+    sel = jnp.pad(sel, ((0, Cp - C), (0, (mp - m) * n)))
+    bitsp = jnp.pad(bits.astype(jnp.float32), ((0, Bp - B), (0, Cp - C)))
+    tabsp = jnp.pad(tables.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    out = lut_eval(bitsp, sel, tabsp, fan_in=n, block_b=bb, block_m=bm,
+                   interpret=interpret)
+    return out[:B, :m]
+
+
+__all__ = ["evaluate", "lut_eval_ref", "selection_onehot"]

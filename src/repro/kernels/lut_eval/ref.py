@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the LUT-layer evaluation kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_eval_ref(bits: jax.Array, mapping: jax.Array,
+                 tables: jax.Array) -> jax.Array:
+    """bits (B, C) {0,1} f32; mapping (m, n) int32; tables (m, 2^n) {0,1}.
+
+    Returns (B, m) f32 — identical semantics to core.lut_layer.lut_eval_hard.
+    """
+    B = bits.shape[0]
+    m, n = mapping.shape
+    sel = jnp.take(bits, mapping.reshape(-1), axis=1).reshape(B, m, n)
+    weights = (2 ** jnp.arange(n, dtype=jnp.int32))
+    addr = jnp.sum(sel.astype(jnp.int32) * weights, axis=-1)
+    out = jnp.take_along_axis(
+        jnp.broadcast_to(tables[None], (B,) + tables.shape), addr[..., None],
+        axis=-1)[..., 0]
+    return out.astype(jnp.float32)
+
+
+def selection_onehot(mapping: jax.Array, num_candidates: int) -> jax.Array:
+    """(m, n) wire indices -> (C, m*n) one-hot selection matrix (the
+    'learned sparse wiring recast as a dense systolic matmul')."""
+    m, n = mapping.shape
+    flat = mapping.reshape(-1)                       # (m*n,)
+    return jax.nn.one_hot(flat, num_candidates, dtype=jnp.float32).T

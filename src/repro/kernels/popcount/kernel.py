@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: grouped popcount + argmax classification head.
+
+FPGA -> TPU adaptation: the GPC compressor tree becomes a VPU group-sum
+over the (B_blk, classes, group) VMEM tile; the argmax comparator tree
+becomes a lane reduction.  Ties resolve to the lower class index (paper
+§IV) via the standard max-then-first-index idiom.
+
+Grid: (B / B_blk,).  One pass, bits never revisit HBM after the load.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _popcount_kernel(bits_ref, counts_ref, idx_ref, *, num_classes: int):
+    bits = bits_ref[...]                                 # (B_blk, m)
+    B_blk, m = bits.shape
+    g = m // num_classes
+    counts = bits.reshape(B_blk, num_classes, g).sum(-1)  # f32
+    counts_ref[...] = counts
+    best = jnp.max(counts, axis=-1, keepdims=True)
+    # first index achieving the max (ties -> lower class index)
+    is_best = counts >= best
+    idx = jnp.argmax(is_best.astype(jnp.int32), axis=-1)
+    idx_ref[...] = idx.astype(jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "block_b",
+                                             "interpret"))
+def popcount_classify(bits: jax.Array, num_classes: int, *,
+                      block_b: int = 512, interpret: bool = False):
+    """bits (B, m) {0,1} f32 -> (counts (B, classes) f32, idx (B, 1) i32)."""
+    B, m = bits.shape
+    assert m % num_classes == 0, (m, num_classes)
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    kernel = functools.partial(_popcount_kernel, num_classes=num_classes)
+    counts, idx = pl.pallas_call(
+        kernel,
+        grid=(B // bb,),
+        in_specs=[pl.BlockSpec((bb, m), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bb, num_classes), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, num_classes), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bits)
+    return counts, idx[:, 0]

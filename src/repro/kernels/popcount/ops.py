@@ -1,0 +1,30 @@
+"""Public op wrapper for the popcount/classifier kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import popcount_classify
+from .ref import popcount_ref, classify_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def classify(bits: jax.Array, num_classes: int, *,
+             interpret: bool | None = None):
+    """(B, m) bits -> (counts (B, classes), argmax (B,)).  Pads B."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B = bits.shape[0]
+    bb = min(512, _round_up(B, 8))
+    Bp = _round_up(B, bb)
+    bitsp = jnp.pad(bits.astype(jnp.float32), ((0, Bp - B), (0, 0)))
+    counts, idx = popcount_classify(bitsp, num_classes, block_b=bb,
+                                    interpret=interpret)
+    return counts[:B], idx[:B]
+
+
+__all__ = ["classify", "popcount_ref", "classify_ref"]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the popcount/classifier kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def popcount_ref(bits: jax.Array, num_classes: int) -> jax.Array:
+    """(B, m) {0,1} -> (B, classes) group counts (f32)."""
+    B, m = bits.shape
+    return bits.reshape(B, num_classes, m // num_classes).sum(-1)
+
+
+def classify_ref(bits: jax.Array, num_classes: int):
+    """(B, m) -> (counts (B, classes), argmax (B,)); ties -> lower index."""
+    counts = popcount_ref(bits, num_classes)
+    return counts, jnp.argmax(counts, axis=-1).astype(jnp.int32)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: thermometer encoding.
+
+FPGA -> TPU adaptation (DESIGN.md §3): the comparator bank becomes a
+VPU broadcast-compare over a VMEM tile.  The (B, F) feature tile and the
+(F, T) threshold bank tile live in VMEM; each grid step emits a
+(B_blk, F_blk, T) bit tile.  T is padded to a lane multiple (128) by
+ops.py so the compare vectorizes cleanly onto the 8x128 VREGs.
+
+Grid: (B / B_blk, F / F_blk).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _thermometer_kernel(x_ref, th_ref, out_ref):
+    # x_ref: (B_blk, F_blk); th_ref: (F_blk, T); out: (B_blk, F_blk, T)
+    x = x_ref[...]                                   # (B_blk, F_blk)
+    th = th_ref[...]                                 # (F_blk, T)
+    out_ref[...] = (x[:, :, None] > th[None]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_f",
+                                             "interpret"))
+def thermometer_encode(x: jax.Array, thresholds: jax.Array, *,
+                       block_b: int = 256, block_f: int = 8,
+                       interpret: bool = False) -> jax.Array:
+    """x (B, F) f32, thresholds (F, T) f32 -> (B, F, T) f32 bits."""
+    B, F = x.shape
+    T = thresholds.shape[1]
+    bb, bf = min(block_b, B), min(block_f, F)
+    assert B % bb == 0 and F % bf == 0, (x.shape, bb, bf)
+    grid = (B // bb, F // bf)
+    return pl.pallas_call(
+        _thermometer_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bf), lambda i, j: (i, j)),
+            pl.BlockSpec((bf, T), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bf, T), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, F, T), jnp.float32),
+        interpret=interpret,
+    )(x, thresholds)

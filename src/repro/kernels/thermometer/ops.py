@@ -1,0 +1,42 @@
+"""Public op wrapper for the thermometer kernel (pad + backend switch)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import thermometer_encode
+from .ref import thermometer_ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def encode(x: jax.Array, thresholds: jax.Array, *,
+           interpret: bool | None = None, flatten: bool = True) -> jax.Array:
+    """Thermometer-encode with the Pallas kernel.
+
+    Pads T to a 128-lane multiple and B/F to block multiples, then slices
+    back.  On CPU (no TPU available) runs the kernel in interpret mode.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, F = x.shape
+    T = thresholds.shape[1]
+    Tp = _round_up(T, 128)
+    bb = min(256, _round_up(B, 8))
+    Bp = _round_up(B, bb)
+    bf = min(8, F)
+    Fp = _round_up(F, bf)
+    xp = jnp.pad(x, ((0, Bp - B), (0, Fp - F)))
+    # pad thresholds with +inf so padded bits are 0
+    thp = jnp.pad(thresholds, ((0, Fp - F), (0, Tp - T)),
+                  constant_values=jnp.inf)
+    bits = thermometer_encode(xp, thp, block_b=bb, block_f=bf,
+                              interpret=interpret)
+    bits = bits[:B, :F, :T]
+    return bits.reshape(B, F * T) if flatten else bits
+
+
+__all__ = ["encode", "thermometer_ref"]

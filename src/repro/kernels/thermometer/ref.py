@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the thermometer-encode kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def thermometer_ref(x: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """x (B, F) float; thresholds (F, T) ascending -> bits (B, F, T) f32.
+
+    bit[b, f, t] = x[b, f] > thresholds[f, t]  (matches core.thermometer).
+    """
+    return (x[:, :, None] > thresholds[None]).astype(jnp.float32)

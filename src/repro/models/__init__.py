@@ -1,0 +1,4 @@
+from . import layers, transformer, mamba2, rglru, whisper, api
+from .api import (module_for, abstract_params, param_axes, batch_specs,
+                  batch_axes, abstract_cache, cache_axes, make_train_step,
+                  make_prefill, make_decode_step)

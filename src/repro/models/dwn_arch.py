@@ -1,0 +1,176 @@
+"""DWN as a production arch: the paper's accelerator on the TPU mesh.
+
+The FPGA accelerator is fully parallel — one sample per cycle.  The TPU
+equivalent is throughput serving/training over a very large sample batch,
+data-parallel across the pod, with the LUT layer tensor-parallel over
+"model" (selection matmul + table evaluation sharded by LUT).
+
+Exposes the same module interface as the LM families so the dry-run can
+lower it on the production meshes:
+
+  * ``loss_fn``  — the differentiable DWN training step (EFD + learnable
+    mapping + popcount CE), batch (B, 16) features;
+  * ``prefill``  — batched hard inference (the accelerator datapath):
+    thermometer encode -> one-hot selection matmul -> corner-product LUT
+    eval -> popcount -> argmax.  Two variants:
+      - staged (baseline): the (B, F*T) bit tensor is materialized, the
+        exact analogue of a PEN design with a stand-alone encoder stage;
+      - fused (beyond-paper): ``lax.map`` over batch blocks so the unary
+        blow-up lives only in VMEM-sized tiles (the Pallas fused kernel
+        expresses the same insight on real TPUs; this variant makes it
+        visible to the dry-run/roofline on the CPU pipeline).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..sharding.annotate import hint
+from ..sharding.partition import logical
+from . import layers as L
+
+Array = jax.Array
+
+FUSED_BLOCK = 4096          # samples per VMEM-resident block (fused path)
+
+
+def _dims(cfg: ArchConfig):
+    F, T = cfg.d_model, cfg.dwn_bits
+    m, n = cfg.dwn_luts, 6
+    C = cfg.vocab_size
+    return F, T, m, n, C
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(key: Array, cfg: ArchConfig, tp: int = 16):
+    F, T, m, n, C = _dims(cfg)
+    k1, k2 = jax.random.split(key)
+    # uniform threshold grid stand-in (training fits distributive quantiles)
+    th = jnp.linspace(-1.0, 1.0, T + 2)[1:-1]
+    return {
+        "thresholds": jnp.tile(th[None], (F, 1)).astype(jnp.float32),
+        "scores": jax.random.normal(k1, (m, n, F * T), jnp.float32) * 0.01,
+        "tables": jax.random.uniform(k2, (m, 2 ** n), jnp.float32,
+                                     minval=-1, maxval=1),
+    }
+
+
+def param_axes(cfg: ArchConfig):
+    return {
+        "thresholds": logical(None, None, name="dwn.thresholds"),
+        "scores": logical("ff", None, None, name="dwn.scores"),
+        "tables": logical("ff", None, name="dwn.tables"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# training step (differentiable, EFD)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ArchConfig, batch, *, tp: int = 16) -> Array:
+    from ..core.lut_layer import lut_layer_apply
+    from ..core.classifier import cross_entropy, group_popcount
+    F, T, m, n, C = _dims(cfg)
+    x = hint(batch["features"], "dp", None)          # (B, F)
+    bits = (x[:, :, None] > params["thresholds"][None]).astype(jnp.float32)
+    bits = jax.lax.stop_gradient(bits.reshape(x.shape[0], F * T))
+    out = lut_layer_apply(
+        {"scores": params["scores"], "tables": params["tables"]}, bits)
+    counts = group_popcount(out, C)
+    tau = max(0.3, (m // C) / 12.0)
+    return cross_entropy(counts / tau, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving (the accelerator datapath)
+# ---------------------------------------------------------------------------
+
+def _hard_forward(params, cfg: ArchConfig, x: Array) -> Array:
+    """Hard inference datapath.
+
+    baseline ("corner"/"contig"): bits fully materialized in f32, LUT
+    read via the (B, m, 64) corner expansion, contiguous class groups
+    (paper Fig. 1 layout) — whose reshape straddles the model shards and
+    forces an all-gather of the LUT outputs.
+
+    optimized ("gather"/"strided", §Perf iters 2-3): bf16 bits feed the
+    selection matmul; the LUT read is an address gather (no (B, m, 64)
+    tensor); LUTs are class-strided so the per-shard popcount partials
+    all-reduce 5 floats per sample instead of gathering m bits.
+    """
+    F, T, m, n, C = _dims(cfg)
+    B = x.shape[0]
+    bits = (x[:, :, None] > params["thresholds"][None]).astype(
+        L.COMPUTE_DTYPE).reshape(B, F * T)
+    bits = hint(bits, "dp", None)
+    # learned wiring as a dense selection matmul (MXU form)
+    sel_oh = jax.nn.one_hot(jnp.argmax(params["scores"], -1), F * T,
+                            dtype=L.COMPUTE_DTYPE)   # (m, n, F*T)
+    s = hint(jnp.einsum("bc,mnc->bmn", bits, sel_oh), "dp", "model", None)
+    if cfg.dwn_datapath == "gather":
+        # address gather: no (B, m, 2^n) intermediate
+        weights = (2 ** jnp.arange(n, dtype=jnp.int32))
+        addr = jnp.sum(s.astype(jnp.int32) * weights, axis=-1)   # (B, m)
+        tab_flat = (params["tables"] > 0).astype(jnp.float32).reshape(-1)
+        flat_idx = jnp.arange(m, dtype=jnp.int32)[None] * (2 ** n) + addr
+        out = jnp.take(tab_flat, flat_idx)            # (B, m)
+    else:
+        tab = (params["tables"] > 0).astype(jnp.float32)
+        A = 2 ** n
+        w = jnp.ones(s.shape[:2] + (A,), jnp.float32)
+        corners = ((jnp.arange(A)[:, None] >> jnp.arange(n)[None]) & 1) \
+            .astype(jnp.float32)                      # (A, n)
+        for i in range(n):
+            si = s[..., i:i + 1].astype(jnp.float32)
+            w = w * (si * corners[None, None, :, i]
+                     + (1 - si) * (1 - corners[None, None, :, i]))
+        out = jnp.einsum("bma,ma->bm", w, tab)        # (B, m)
+    out = hint(out, "dp", "model")
+    if cfg.dwn_grouping == "strided":
+        # LUT j -> class j % C: per-shard blocks stay class-complete, so
+        # the group reduce partial-sums locally + all-reduces (B, C)
+        counts = out.reshape(B, m // C, C).sum(1)
+    else:
+        counts = out.reshape(B, C, m // C).sum(-1)
+    return counts
+
+
+def prefill(params, cfg: ArchConfig, batch, *, tp: int = 16,
+            cache_len: int | None = None):
+    """Batched inference; returns (argmax 'logits', trivial cache)."""
+    x = batch["features"]
+    if cfg.dwn_fused:
+        # block the batch so each chip's per-block bit tile is VMEM-sized
+        # (~4k samples/chip); the Pallas fused kernel realizes the same
+        # blocking natively on TPU with the selection matrix resident.
+        nb = 16 if x.shape[0] % 16 == 0 else 1
+        xb = x.reshape(nb, -1, x.shape[-1])
+        counts = jax.lax.map(
+            lambda xc: _hard_forward(params, cfg, xc), xb)
+        counts = counts.reshape(x.shape[0], -1)
+    else:
+        counts = _hard_forward(params, cfg, x)
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    return counts, cache
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, cache_len: int,
+               tp: int = 16):
+    return {"pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_axes(cfg: ArchConfig, *, seq_shard: bool = False):
+    return {"pos": logical(name="cache.pos")}
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens, *, tp: int = 16):
+    raise NotImplementedError("DWN is a feed-forward classifier; "
+                              "serving = batched prefill")

@@ -1,0 +1,417 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern (arXiv:2402.19427): repeating [recurrent, recurrent, attention]
+superblocks; 26 layers = 8 superblocks + 2 trailing recurrent layers.
+Attention layers use MQA (kv=1) with a local sliding window (2048) and RoPE.
+
+RG-LRU (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          # input gate
+    a_t = exp(c * r_t * log(sigmoid(Lambda)))     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` on the linear recurrence
+(log-depth on TPU); decode is the single-step recurrence (O(1) state —
+this is why long_500k decode is valid for this arch).
+
+TP: lru_width and d_ff shard over "model"; recurrence is element-wise so
+no collective is introduced inside the scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.annotate import hint, hint_act
+from ..sharding.partition import logical
+from . import layers as L
+
+Array = jax.Array
+
+LRU_C = 8.0
+CONV_K = 4
+
+
+def _layout(cfg: ArchConfig, tp: int) -> L.HeadLayout:
+    return L.make_head_layout(cfg.num_heads, cfg.num_kv_heads, tp)
+
+
+def block_pattern(num_layers: int) -> list[str]:
+    """['rec','rec','attn', ...] for the given depth."""
+    return [("attn" if i % 3 == 2 else "rec") for i in range(num_layers)]
+
+
+def _num_super(cfg: ArchConfig) -> tuple[int, int]:
+    """(#full superblocks, #trailing rec layers)."""
+    ns = cfg.num_layers // 3
+    return ns, cfg.num_layers - 3 * ns
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_rec_layer(key: Array, cfg: ArchConfig):
+    D, W = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 5)
+    std = D ** -0.5
+    return {
+        "ln1": L.init_rms_norm(D),
+        "w_gate": jax.random.normal(ks[0], (D, W), L.PARAM_DTYPE) * std,
+        "w_in": jax.random.normal(ks[1], (D, W), L.PARAM_DTYPE) * std,
+        "conv_w": jax.random.normal(ks[2], (CONV_K, W), L.PARAM_DTYPE)
+                  * CONV_K ** -0.5,
+        "conv_b": jnp.zeros((W,), L.PARAM_DTYPE),
+        "wa": jax.random.normal(ks[3], (W, W), L.PARAM_DTYPE) * W ** -0.5 * 0.1,
+        "ba": jnp.zeros((W,), L.PARAM_DTYPE),
+        "wx": jax.random.normal(ks[4], (W, W), L.PARAM_DTYPE) * W ** -0.5 * 0.1,
+        "bx": jnp.zeros((W,), L.PARAM_DTYPE),
+        # Lambda init so that a = sigmoid(Lambda) in (0.9, 0.999)
+        "lam": jnp.linspace(2.2, 6.9, W).astype(L.PARAM_DTYPE),
+        "w_out": jax.random.normal(jax.random.fold_in(key, 9), (W, D),
+                                   L.PARAM_DTYPE) * W ** -0.5,
+        "ln2": L.init_rms_norm(D),
+        "mlp": L.init_swiglu(jax.random.fold_in(key, 10), D, cfg.d_ff),
+    }
+
+
+def _axes_rec_layer():
+    return {
+        "ln1": L.axes_rms_norm(),
+        "w_gate": logical("embed", "lru", name="rec.w_gate"),
+        "w_in": logical("embed", "lru", name="rec.w_in"),
+        "conv_w": logical(None, "lru", name="rec.conv_w"),
+        "conv_b": logical("lru", name="rec.conv_b"),
+        "wa": logical(None, "lru", name="rec.wa"),
+        "ba": logical("lru", name="rec.ba"),
+        "wx": logical(None, "lru", name="rec.wx"),
+        "bx": logical("lru", name="rec.bx"),
+        "lam": logical("lru", name="rec.lam"),
+        "w_out": logical("lru", "embed", name="rec.w_out"),
+        "ln2": L.axes_rms_norm(),
+        "mlp": L.axes_swiglu(),
+    }
+
+
+def _init_attn_layer(key: Array, cfg: ArchConfig, layout):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rms_norm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg.d_model, layout, cfg.head_dim_),
+        "ln2": L.init_rms_norm(cfg.d_model),
+        "mlp": L.init_swiglu(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _axes_attn_layer():
+    return {
+        "ln1": L.axes_rms_norm(),
+        "attn": L.axes_attention(),
+        "ln2": L.axes_rms_norm(),
+        "mlp": L.axes_swiglu(),
+    }
+
+
+def init_params(key: Array, cfg: ArchConfig, tp: int = 16):
+    layout = _layout(cfg, tp)
+    ns, nt = _num_super(cfg)
+    ke, ku, k1, k2, k3, k4 = jax.random.split(key, 6)
+    p = {
+        "embed": L.init_embedding(ke, cfg.vocab_padded(tp), cfg.d_model),
+        "super": {
+            "rec1": jax.vmap(lambda k: _init_rec_layer(k, cfg))(
+                jax.random.split(k1, ns)),
+            "rec2": jax.vmap(lambda k: _init_rec_layer(k, cfg))(
+                jax.random.split(k2, ns)),
+            "attn": jax.vmap(lambda k: _init_attn_layer(k, cfg, layout))(
+                jax.random.split(k3, ns)),
+        },
+        "final_norm": L.init_rms_norm(cfg.d_model),
+    }
+    if nt:
+        p["tail"] = jax.vmap(lambda k: _init_rec_layer(k, cfg))(
+            jax.random.split(k4, nt))
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.init_unembed(ku, cfg.d_model, cfg.vocab_padded(tp))
+    return p
+
+
+def param_axes(cfg: ArchConfig):
+    from .transformer import _stack_axes
+    ns, nt = _num_super(cfg)
+    a = {
+        "embed": L.axes_embedding(),
+        "super": {
+            "rec1": _stack_axes(_axes_rec_layer()),
+            "rec2": _stack_axes(_axes_rec_layer()),
+            "attn": _stack_axes(_axes_attn_layer()),
+        },
+        "final_norm": L.axes_rms_norm(),
+    }
+    if nt:
+        a["tail"] = _stack_axes(_axes_rec_layer())
+    if not cfg.tie_embeddings:
+        a["unembed"] = L.axes_unembed()
+    return a
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _rglru_scan(xw: Array, r: Array, i: Array, lam: Array,
+                h0: Array | None = None):
+    """xw/r/i: (B, S, W) -> (y (B,S,W), h_last (B,W)).  Associative scan."""
+    log_a = LRU_C * r.astype(jnp.float32) * jax.nn.log_sigmoid(
+        lam.astype(jnp.float32))                          # (B,S,W), negative
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i.astype(jnp.float32) * xw.astype(jnp.float32))
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(xw.dtype), h[:, -1]
+
+
+def _causal_conv(xw: Array, w: Array, b: Array) -> Array:
+    K = w.shape[0]
+    pad = jnp.pad(xw, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros(xw.shape, jnp.float32)
+    for i in range(K):
+        out = out + pad[:, i:i + xw.shape[1]].astype(jnp.float32) \
+            * w[K - 1 - i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(xw.dtype)
+
+
+def _rec_block(lp, cfg: ArchConfig, x: Array, *, h0=None, conv0=None,
+               return_state: bool = False):
+    """Griffin recurrent block (full-sequence).  x: (B,S,D)."""
+    cd = L.COMPUTE_DTYPE
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.norm_eps)
+    gate = jax.nn.gelu(hint(jnp.einsum(
+        "bsd,dw->bsw", h.astype(cd), lp["w_gate"].astype(cd)),
+        "dp", None, "model").astype(jnp.float32),
+                       approximate=True).astype(cd)
+    xw = hint(jnp.einsum("bsd,dw->bsw", h.astype(cd), lp["w_in"].astype(cd)),
+              "dp", None, "model")
+    if conv0 is not None:                                 # decode-time prepend
+        xw_full = jnp.concatenate([conv0.astype(cd), xw], axis=1)
+        conv_out = _causal_conv(xw_full, lp["conv_w"], lp["conv_b"])
+        conv_out = conv_out[:, conv0.shape[1]:]
+    else:
+        conv_out = _causal_conv(xw, lp["conv_w"], lp["conv_b"])
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wu->bsu", conv_out.astype(jnp.float32),
+                                  lp["wa"].astype(jnp.float32))
+                       + lp["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wu->bsu", conv_out.astype(jnp.float32),
+                                  lp["wx"].astype(jnp.float32))
+                       + lp["bx"].astype(jnp.float32))
+    y, h_last = _rglru_scan(conv_out, r, i, lp["lam"], h0=h0)
+    y = y * gate
+    out = jnp.einsum("bsw,wd->bsd", y.astype(cd), lp["w_out"].astype(cd))
+    x = hint_act(x + out)
+    # MLP
+    hn = L.rms_norm(x, lp["ln2"]["scale"], cfg.norm_eps)
+    x = x + L.swiglu(lp["mlp"], hn)
+    if return_state:
+        conv_tail = xw[:, -(CONV_K - 1):] if xw.shape[1] >= CONV_K - 1 \
+            else jnp.pad(xw, ((0, 0), (CONV_K - 1 - xw.shape[1], 0), (0, 0)))
+        return x, (h_last, conv_tail)
+    return x, None
+
+
+def _attn_block(lp, cfg: ArchConfig, layout, x: Array, positions: Array,
+                *, collect_kv: bool = False):
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.norm_eps)
+    q, k, v = L.qkv_project(lp["attn"], h, layout, positions=positions,
+                            rope_theta=cfg.rope_theta or None)
+    o = L.attention_chunked(q, k, v, layout, causal=True,
+                            window=cfg.local_window, kv_chunk=cfg.attn_chunk)
+    x = x + L.attn_output(lp["attn"], o)
+    hn = L.rms_norm(x, lp["ln2"]["scale"], cfg.norm_eps)
+    x = x + L.swiglu(lp["mlp"], hn)
+    return x, ((k, v) if collect_kv else None)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ArchConfig, batch, *, tp: int = 16,
+            collect: bool = False):
+    layout = _layout(cfg, tp)
+    x = hint_act(L.embed(params["embed"], batch["tokens"]))
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def super_body(carry, lp):
+        h = carry
+        h, s1 = _rec_block(lp["rec1"], cfg, h, return_state=collect)
+        h, s2 = _rec_block(lp["rec2"], cfg, h, return_state=collect)
+        h, kv = _attn_block(lp["attn"], cfg, layout, h, positions,
+                            collect_kv=collect)
+        return h, (s1, s2, kv) if collect else None
+
+    body = jax.checkpoint(super_body) if cfg.remat else super_body
+    x, collected = jax.lax.scan(body, x, params["super"])
+
+    tail_states = []
+    if "tail" in params:
+        def tail_body(carry, lp):
+            h, st = _rec_block(lp, cfg, carry, return_state=collect)
+            return h, st
+        tbody = jax.checkpoint(tail_body) if cfg.remat else tail_body
+        x, tail_states = jax.lax.scan(tbody, x, params["tail"])
+
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(L.COMPUTE_DTYPE),
+                            params["embed"]["table"].astype(L.COMPUTE_DTYPE))
+    else:
+        logits = L.unembed(params["unembed"], x)
+    return logits, (collected, tail_states)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, tp: int = 16) -> Array:
+    logits, _ = forward(params, cfg, batch, tp=tp)
+    return L.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                                vocab_real=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch_size: int, cache_len: int,
+               tp: int = 16):
+    layout = _layout(cfg, tp)
+    ns, nt = _num_super(cfg)
+    W = cfg.lru_width
+    Skv = min(cache_len, cfg.local_window)
+    return {
+        "lru1": jnp.zeros((ns, batch_size, W), jnp.float32),
+        "conv1": jnp.zeros((ns, batch_size, CONV_K - 1, W), L.COMPUTE_DTYPE),
+        "lru2": jnp.zeros((ns, batch_size, W), jnp.float32),
+        "conv2": jnp.zeros((ns, batch_size, CONV_K - 1, W), L.COMPUTE_DTYPE),
+        "k": jnp.zeros((ns, batch_size, Skv, layout.kv_padded, cfg.head_dim_),
+                       L.COMPUTE_DTYPE),
+        "v": jnp.zeros((ns, batch_size, Skv, layout.kv_padded, cfg.head_dim_),
+                       L.COMPUTE_DTYPE),
+        "lru_t": jnp.zeros((max(nt, 1), batch_size, W), jnp.float32),
+        "conv_t": jnp.zeros((max(nt, 1), batch_size, CONV_K - 1, W),
+                            L.COMPUTE_DTYPE),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ArchConfig, *, seq_shard: bool = False):
+    kv = logical("layers", "batch", None, "kv_heads", "head_dim",
+                 name="cache.kv")
+    lru = logical("layers", "batch", "lru", name="cache.lru")
+    conv = logical("layers", "batch", None, "lru", name="cache.conv")
+    return {"lru1": lru, "conv1": conv, "lru2": lru, "conv2": conv,
+            "k": kv, "v": kv, "lru_t": lru, "conv_t": conv,
+            "pos": logical(name="cache.pos")}
+
+
+def prefill(params, cfg: ArchConfig, batch, *, tp: int = 16,
+            cache_len: int | None = None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    logits, (collected, tail_states) = forward(params, cfg, batch, tp=tp,
+                                               collect=True)
+    (s1, s2, kvs) = collected
+    k, v = kvs
+    Skv = min(cache_len or S, cfg.local_window)
+    if k.shape[2] > Skv:
+        k, v = k[:, :, -Skv:], v[:, :, -Skv:]
+    elif k.shape[2] < Skv:
+        padn = Skv - k.shape[2]
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, padn), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, padn), (0, 0), (0, 0)))
+    cache = {
+        "lru1": s1[0], "conv1": s1[1], "lru2": s2[0], "conv2": s2[1],
+        "k": k, "v": v, "pos": jnp.asarray(S, jnp.int32),
+    }
+    ns, nt = _num_super(cfg)
+    if nt:
+        cache["lru_t"] = tail_states[0]
+        cache["conv_t"] = tail_states[1]
+    else:
+        cache["lru_t"] = jnp.zeros((1, B, cfg.lru_width), jnp.float32)
+        cache["conv_t"] = jnp.zeros((1, B, CONV_K - 1, cfg.lru_width),
+                                    L.COMPUTE_DTYPE)
+    return logits[:, -1], cache
+
+
+def _rec_step(lp, cfg, x, lru, conv):
+    """Single-token recurrent block; x (B,1,D)."""
+    x2, (h_last, _) = _rec_block(lp, cfg, x, h0=lru, conv0=conv,
+                                 return_state=True)
+    # ring-update conv state: append this token's xw
+    cd = L.COMPUTE_DTYPE
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.norm_eps)
+    xw = jnp.einsum("bsd,dw->bsw", h.astype(cd), lp["w_in"].astype(cd))
+    conv_new = jnp.concatenate([conv[:, 1:], xw.astype(cd)], axis=1)
+    return x2, h_last, conv_new
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: Array, *,
+                tp: int = 16):
+    layout = _layout(cfg, tp)
+    x = L.embed(params["embed"], tokens)
+    pos = cache["pos"]
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    Skv = cache["k"].shape[2]
+    slot = pos % Skv
+
+    def super_body(h, lc):
+        lp, l1, c1, l2, c2, kc, vc = lc
+        h, nl1, nc1 = _rec_step(lp["rec1"], cfg, h, l1, c1)
+        h, nl2, nc2 = _rec_step(lp["rec2"], cfg, h, l2, c2)
+        hn = L.rms_norm(h, lp["attn"]["ln1"]["scale"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"]["attn"], hn, layout,
+                                positions=positions,
+                                rope_theta=cfg.rope_theta or None)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        o = L.attention_decode(q, kc, vc, layout,
+                               cur_len=jnp.full((h.shape[0],), pos + 1),
+                               window=cfg.local_window)
+        h = h + L.attn_output(lp["attn"]["attn"], o)
+        hn = L.rms_norm(h, lp["attn"]["ln2"]["scale"], cfg.norm_eps)
+        h = h + L.swiglu(lp["attn"]["mlp"], hn)
+        return h, (nl1, nc1, nl2, nc2, kc, vc)
+
+    h, (l1s, c1s, l2s, c2s, ks, vs) = jax.lax.scan(
+        super_body, x,
+        (params["super"], cache["lru1"], cache["conv1"],
+         cache["lru2"], cache["conv2"], cache["k"], cache["v"]))
+
+    lts, cts = cache["lru_t"], cache["conv_t"]
+    if "tail" in params:
+        def tail_body(hh, lc):
+            lp, lt, ct = lc
+            hh, nl, nc = _rec_step(lp, cfg, hh, lt, ct)
+            return hh, (nl, nc)
+        h, (lts, cts) = jax.lax.scan(
+            tail_body, h, (params["tail"], cache["lru_t"], cache["conv_t"]))
+
+    h = L.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h.astype(L.COMPUTE_DTYPE),
+                            params["embed"]["table"].astype(L.COMPUTE_DTYPE))
+    else:
+        logits = L.unembed(params["unembed"], h)
+    new_cache = {"lru1": l1s, "conv1": c1s, "lru2": l2s, "conv2": c2s,
+                 "k": ks, "v": vs, "lru_t": lts, "conv_t": cts,
+                 "pos": pos + 1}
+    return logits[:, 0], new_cache

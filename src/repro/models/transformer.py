@@ -1,0 +1,296 @@
+"""Decoder-only transformer LM (dense / MoE / VLM families).
+
+* scan-over-layers with stacked params (compile-time O(1) in depth),
+* per-layer remat (``jax.checkpoint``) so train activations are one
+  (B, S, D) residual per layer,
+* chunked flash attention (see layers.py) with optional sliding window,
+* MoE FFN via capacity routing (layers.moe_apply),
+* VLM: precomputed patch embeddings are prepended to the token embeddings
+  (anyres frontend stub per the assignment).
+
+Interface (shared by all arch modules):
+    init_params(key, cfg, tp) -> params
+    param_axes(cfg)           -> logical-axes pytree (same treedef)
+    loss_fn(params, cfg, batch) -> scalar loss
+    prefill(params, cfg, batch) -> (logits_last, cache)
+    init_cache(cfg, batch_size, cache_len, tp) -> cache pytree (zeros)
+    cache_axes(cfg)           -> logical axes for the cache
+    decode_step(params, cfg, cache, tokens, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.annotate import hint, hint_act
+from ..sharding.partition import logical
+from . import layers as L
+
+Array = jax.Array
+
+
+def _layout(cfg: ArchConfig, tp: int) -> L.HeadLayout:
+    return L.make_head_layout(cfg.num_heads, cfg.num_kv_heads, tp)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key: Array, cfg: ArchConfig, layout: L.HeadLayout):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.init_rms_norm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg.d_model, layout, cfg.head_dim_,
+                                 qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm),
+        "ln2": L.init_rms_norm(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        pad = 0
+        if cfg.moe_ep:
+            from ..configs.base import round_up
+            pad = round_up(cfg.num_experts, 16)
+        p["moe"] = L.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.num_experts,
+                              pad_to=pad)
+    else:
+        p["mlp"] = L.init_swiglu(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _block_axes(cfg: ArchConfig):
+    a = {
+        "ln1": L.axes_rms_norm(),
+        "attn": L.axes_attention(qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm),
+        "ln2": L.axes_rms_norm(),
+    }
+    if cfg.family == "moe":
+        a["moe"] = L.axes_moe(ep=cfg.moe_ep)
+    else:
+        a["mlp"] = L.axes_swiglu()
+    return a
+
+
+def init_params(key: Array, cfg: ArchConfig, tp: int = 16):
+    layout = _layout(cfg, tp)
+    ke, ku, kl = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    layers_p = jax.vmap(lambda k: _init_block(k, cfg, layout))(lkeys)
+    p = {
+        "embed": L.init_embedding(ke, cfg.vocab_padded(tp), cfg.d_model),
+        "layers": layers_p,
+        "final_norm": L.init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.init_unembed(ku, cfg.d_model, cfg.vocab_padded(tp))
+    return p
+
+
+def _stack_axes(tree):
+    """Prepend the scanned 'layers' logical axis to every leaf."""
+    return jax.tree.map(
+        lambda la: logical("layers", *tuple(la), name=la.name),
+        tree, is_leaf=lambda x: isinstance(x, tuple) and hasattr(x, "name"))
+
+
+def param_axes(cfg: ArchConfig):
+    a = {
+        "embed": L.axes_embedding(),
+        "layers": _stack_axes(_block_axes(cfg)),
+        "final_norm": L.axes_rms_norm(),
+    }
+    if not cfg.tie_embeddings:
+        a["unembed"] = L.axes_unembed()
+    return a
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_apply(lp, cfg: ArchConfig, layout, x: Array, positions: Array,
+                 *, collect_kv: bool):
+    h = L.rms_norm(x, lp["ln1"]["scale"], cfg.norm_eps)
+    q, k, v = L.qkv_project(lp["attn"], h, layout, positions=positions,
+                            rope_theta=cfg.rope_theta or None,
+                            qk_norm_eps=cfg.norm_eps)
+    import jax.numpy as _jnp
+    sdt = _jnp.bfloat16 if cfg.attn_scores_bf16 else _jnp.float32
+    if cfg.attn_impl == "pallas" and cfg.swa_window is None:
+        # real-TPU path: causal block skipping + VMEM-resident tiles
+        from ..kernels.flash_attn import ops as _fa
+        o = _fa.attend(q, k, v, causal=True,
+                       block=min(cfg.attn_chunk, q.shape[1]))
+    elif cfg.attn_impl == "tri" and cfg.swa_window is None:
+        o = L.attention_causal_tri(q, k, v, layout,
+                                   kv_chunk=cfg.attn_chunk,
+                                   scores_dtype=sdt)
+    else:
+        o = L.attention_chunked(q, k, v, layout, causal=True,
+                                window=cfg.swa_window,
+                                kv_chunk=cfg.attn_chunk,
+                                scores_dtype=sdt)
+    x = hint_act(x + L.attn_output(lp["attn"], o))
+    h = L.rms_norm(x, lp["ln2"]["scale"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = L.moe_apply(lp["moe"], h, top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             num_real_experts=cfg.num_experts,
+                             ep=cfg.moe_ep)
+    else:
+        y, aux = L.swiglu(lp["mlp"], h), 0.0
+    x = hint_act(x + y)
+    kv = (k, v) if collect_kv else None
+    return x, aux, kv
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch) -> tuple[Array, Array]:
+    """Returns (x, positions). VLM prepends patch embeddings."""
+    x = hint_act(L.embed(params["embed"], batch["tokens"]))
+    if cfg.family == "vlm" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)        # (B, P, D)
+        x = jnp.concatenate([patches, x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return x, positions
+
+
+def forward(params, cfg: ArchConfig, batch, *, tp: int = 16,
+            collect_kv: bool = False):
+    """Full-sequence forward -> (logits, aux, cache_kv or None)."""
+    layout = _layout(cfg, tp)
+    x, positions = _embed_inputs(params, cfg, batch)
+
+    def body(carry, lp):
+        h, aux = carry
+        h2, a, kv = _block_apply(lp, cfg, layout, h, positions,
+                                 collect_kv=collect_kv)
+        return (h2, aux + a), kv
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), kvs = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                 params["layers"])
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(L.COMPUTE_DTYPE),
+                            params["embed"]["table"].astype(L.COMPUTE_DTYPE))
+    else:
+        logits = L.unembed(params["unembed"], x)
+    return hint(logits, "dp", None, "model"), aux, kvs
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, tp: int = 16) -> Array:
+    logits, aux, _ = forward(params, cfg, batch, tp=tp)
+    if cfg.family == "vlm" and "patches" in batch:
+        # only text positions carry labels; drop patch positions
+        P = batch["patches"].shape[1]
+        logits = logits[:, P:]
+    ce = L.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                              vocab_real=cfg.vocab_size)
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode against a KV cache
+# ---------------------------------------------------------------------------
+
+def cache_len_for(cfg: ArchConfig, seq_len: int) -> int:
+    """Effective KV-cache length: SWA bounds it at the window size; VLM
+    prompts carry num_patches extra (image) positions ahead of the text."""
+    if cfg.family == "vlm":
+        seq_len = seq_len + cfg.num_patches
+    if cfg.swa_window is not None:
+        return min(seq_len, cfg.swa_window)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, cache_len: int,
+               tp: int = 16):
+    layout = _layout(cfg, tp)
+    Skv = cache_len_for(cfg, cache_len)
+    shape = (cfg.num_layers, batch_size, Skv, layout.kv_padded, cfg.head_dim_)
+    return {
+        "k": jnp.zeros(shape, L.COMPUTE_DTYPE),
+        "v": jnp.zeros(shape, L.COMPUTE_DTYPE),
+        "pos": jnp.zeros((), jnp.int32),          # tokens written so far
+    }
+
+
+def cache_axes(cfg: ArchConfig, *, seq_shard: bool = False):
+    seq_ax = "kv_seq_sp" if seq_shard else None
+    kv = logical("layers", "batch", seq_ax, "kv_heads", "head_dim",
+                 name="cache.kv")
+    return {"k": kv, "v": kv, "pos": logical(name="cache.pos")}
+
+
+def prefill(params, cfg: ArchConfig, batch, *, tp: int = 16,
+            cache_len: int | None = None):
+    """Process the full prompt; return (last-token logits, filled cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    logits, _, kvs = forward(params, cfg, batch, tp=tp, collect_kv=True)
+    k, v = kvs                                      # (L, B, S(+P), Kp, hd)
+    Skv = cache_len_for(cfg, cache_len or S)
+    if k.shape[2] > Skv:                            # keep the last window
+        k, v = k[:, :, -Skv:], v[:, :, -Skv:]
+    elif k.shape[2] < Skv:
+        padn = Skv - k.shape[2]
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, padn), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, padn), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v,
+             "pos": jnp.asarray(logits.shape[1], jnp.int32)}
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: Array, *,
+                tp: int = 16):
+    """One decode step: tokens (B, 1) against the cache.  Returns
+    (logits (B, Vp), new cache).  SWA caches are ring buffers."""
+    layout = _layout(cfg, tp)
+    x = L.embed(params["embed"], tokens)            # (B, 1, D)
+    pos = cache["pos"]                              # scalar: tokens so far
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    Skv = cache["k"].shape[2]
+    slot = pos % Skv if cfg.swa_window is not None else jnp.minimum(pos, Skv - 1)
+
+    def body(h, lc):
+        lp, kc, vc = lc
+        hn = L.rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], hn, layout, positions=positions,
+                                rope_theta=cfg.rope_theta or None,
+                                qk_norm_eps=cfg.norm_eps)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        cur = jnp.minimum(pos + 1, Skv) if cfg.swa_window is None else pos + 1
+        o = L.attention_decode(q, kc, vc, layout,
+                               cur_len=jnp.full((h.shape[0],), cur),
+                               window=cfg.swa_window)
+        h = h + L.attn_output(lp["attn"], o)
+        hn = L.rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = L.moe_apply(lp["moe"], hn, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               num_real_experts=cfg.num_experts,
+                               ep=cfg.moe_ep)
+        else:
+            y = L.swiglu(lp["mlp"], hn)
+        return h + y, (kc, vc)
+
+    def scan_body(h, lc):
+        h, kv = body(h, lc)
+        return h, kv
+
+    h, (ks, vs) = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"]))
+    h = L.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h.astype(L.COMPUTE_DTYPE),
+                            params["embed"]["table"].astype(L.COMPUTE_DTYPE))
+    else:
+        logits = L.unembed(params["unembed"], h)
+    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    return logits[:, 0], new_cache

@@ -1,0 +1,334 @@
+"""Whisper-large-v3 backbone: encoder-decoder transformer.
+
+Per the assignment the conv audio frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, enc_frames, d_model) — i.e. the
+output of the two-conv downsampling stack.  We add sinusoidal positions to
+the frames, run the (non-causal, MHA) encoder, and a causal decoder with
+cross-attention.  Whisper uses LayerNorm (with bias), GELU MLPs and learned
+absolute positions on the decoder (sinusoidal here; positions are buffers,
+not trained — shapes and FLOPs are identical).
+
+serve: prefill = encoder + decoder prompt pass (caches decoder self-attn KV
+and the per-layer cross-attention K/V computed once from encoder states);
+decode_step = one decoder token.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.annotate import hint, hint_act, hint_heads
+from ..sharding.partition import logical
+from . import layers as L
+
+Array = jax.Array
+
+
+def _layout(cfg: ArchConfig, tp: int) -> L.HeadLayout:
+    return L.make_head_layout(cfg.num_heads, cfg.num_kv_heads, tp)
+
+
+def sinusoid_positions(length: int, dim: int) -> np.ndarray:
+    pos = np.arange(length)[:, None].astype(np.float32)
+    i = np.arange(dim // 2)[None, :].astype(np.float32)
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    return np.concatenate([np.sin(angle), np.cos(angle)], -1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_enc_layer(key: Array, cfg: ArchConfig, layout):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_layer_norm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg.d_model, layout, cfg.head_dim_,
+                                 qkv_bias=True, out_bias=True),
+        "ln2": L.init_layer_norm(cfg.d_model),
+        "mlp": L.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _axes_enc_layer():
+    return {
+        "ln1": L.axes_layer_norm(),
+        "attn": L.axes_attention(qkv_bias=True, out_bias=True),
+        "ln2": L.axes_layer_norm(),
+        "mlp": L.axes_gelu_mlp(),
+    }
+
+
+def _init_dec_layer(key: Array, cfg: ArchConfig, layout):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_layer_norm(cfg.d_model),
+        "self_attn": L.init_attention(k1, cfg.d_model, layout, cfg.head_dim_,
+                                      qkv_bias=True, out_bias=True),
+        "ln_x": L.init_layer_norm(cfg.d_model),
+        "cross_attn": L.init_attention(k2, cfg.d_model, layout, cfg.head_dim_,
+                                       qkv_bias=True, out_bias=True),
+        "ln2": L.init_layer_norm(cfg.d_model),
+        "mlp": L.init_gelu_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _axes_dec_layer():
+    return {
+        "ln1": L.axes_layer_norm(),
+        "self_attn": L.axes_attention(qkv_bias=True, out_bias=True),
+        "ln_x": L.axes_layer_norm(),
+        "cross_attn": L.axes_attention(qkv_bias=True, out_bias=True),
+        "ln2": L.axes_layer_norm(),
+        "mlp": L.axes_gelu_mlp(),
+    }
+
+
+def init_params(key: Array, cfg: ArchConfig, tp: int = 16):
+    layout = _layout(cfg, tp)
+    ke, ku, k1, k2 = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k1, cfg.enc_layers)
+    dec_keys = jax.random.split(k2, cfg.num_layers)
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab_padded(tp), cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, layout))(enc_keys),
+        "enc_ln": L.init_layer_norm(cfg.d_model),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, layout))(dec_keys),
+        "dec_ln": L.init_layer_norm(cfg.d_model),
+        # whisper ties the output projection to the token embedding
+    }
+
+
+def param_axes(cfg: ArchConfig):
+    from .transformer import _stack_axes
+    return {
+        "embed": L.axes_embedding(),
+        "enc_layers": _stack_axes(_axes_enc_layer()),
+        "enc_ln": L.axes_layer_norm(),
+        "dec_layers": _stack_axes(_axes_dec_layer()),
+        "dec_ln": L.axes_layer_norm(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder / decoder
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ArchConfig, frames: Array, *, tp: int = 16) -> Array:
+    """frames: (B, F, D) stub embeddings -> encoder states (B, F, D)."""
+    layout = _layout(cfg, tp)
+    B, F, D = frames.shape
+    pos_emb = jnp.asarray(sinusoid_positions(F, D))
+    x = hint_act(frames.astype(L.COMPUTE_DTYPE)
+                 + pos_emb.astype(L.COMPUTE_DTYPE))
+    positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    def body(h, lp):
+        hn = L.layer_norm(h, lp["ln1"]["scale"], lp["ln1"]["bias"],
+                          cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["attn"], hn, layout, positions=positions,
+                                rope_theta=None)
+        o = L.attention_chunked(q, k, v, layout, causal=False,
+                                kv_chunk=cfg.attn_chunk)
+        h = h + L.attn_output(lp["attn"], o)
+        hn = L.layer_norm(h, lp["ln2"]["scale"], lp["ln2"]["bias"],
+                          cfg.norm_eps)
+        h = hint_act(h + L.gelu_mlp(lp["mlp"], hn))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return L.layer_norm(x, params["enc_ln"]["scale"], params["enc_ln"]["bias"],
+                        cfg.norm_eps)
+
+
+def _dec_block(lp, cfg, layout, x, positions, enc_kv, *, collect_kv=False):
+    """enc_kv: (k_enc, v_enc) precomputed per layer (B, F, Kp, hd)."""
+    hn = L.layer_norm(x, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
+    q, k, v = L.qkv_project(lp["self_attn"], hn, layout, positions=positions,
+                            rope_theta=None)
+    o = L.attention_chunked(q, k, v, layout, causal=True,
+                            kv_chunk=cfg.attn_chunk)
+    x = x + L.attn_output(lp["self_attn"], o)
+    # cross-attention
+    hn = L.layer_norm(x, lp["ln_x"]["scale"], lp["ln_x"]["bias"], cfg.norm_eps)
+    cd = L.COMPUTE_DTYPE
+    qx = hint_heads(jnp.einsum("bsd,dhk->bshk", hn.astype(cd),
+                    lp["cross_attn"]["wq"].astype(cd)))
+    if "bq" in lp["cross_attn"]:
+        qx = qx + lp["cross_attn"]["bq"].astype(cd)
+    k_enc, v_enc = enc_kv
+    ox = L.attention_chunked(qx, k_enc, v_enc, layout, causal=False,
+                             kv_chunk=cfg.attn_chunk)
+    x = x + L.attn_output(lp["cross_attn"], ox)
+    hn = L.layer_norm(x, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+    x = hint_act(x + L.gelu_mlp(lp["mlp"], hn))
+    return x, ((k, v) if collect_kv else None)
+
+
+def cross_kv(params, cfg: ArchConfig, enc_states: Array, *, tp: int = 16):
+    """Per-decoder-layer cross K/V from encoder states: (Ldec, B, F, Kp, hd)."""
+    layout = _layout(cfg, tp)
+    cd = L.COMPUTE_DTYPE
+
+    def one(lp):
+        ca = lp["cross_attn"]
+        k = jnp.einsum("bfd,dhk->bfhk", enc_states.astype(cd),
+                       ca["wk"].astype(cd))
+        v = jnp.einsum("bfd,dhk->bfhk", enc_states.astype(cd),
+                       ca["wv"].astype(cd))
+        if "bk" in ca:
+            k = k + ca["bk"].astype(cd)
+            v = v + ca["bv"].astype(cd)
+        r = layout.kv_repeat
+        if r > 1:
+            k, v = jnp.repeat(k, r, 2), jnp.repeat(v, r, 2)
+        if k.shape[2] < layout.kv_padded:
+            pad = layout.kv_padded - k.shape[2]
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        from ..sharding.annotate import hint_heads
+        return hint_heads(k), hint_heads(v)
+
+    return jax.lax.map(lambda lp: one(lp), params["dec_layers"])
+
+
+def decode_train(params, cfg: ArchConfig, tokens: Array, enc_states: Array,
+                 *, tp: int = 16, collect_kv: bool = False):
+    layout = _layout(cfg, tp)
+    B, S = tokens.shape
+    D = cfg.d_model
+    x = hint_act(L.embed(params["embed"], tokens))
+    x = x + jnp.asarray(sinusoid_positions(S, D)).astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    ckv = cross_kv(params, cfg, enc_states, tp=tp)   # (L,B,F,Kp,hd) x2
+
+    def body(h, lc):
+        lp, kx, vx = lc
+        h, kv = _dec_block(lp, cfg, layout, h, positions, (kx, vx),
+                           collect_kv=collect_kv)
+        return h, kv
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, kvs = jax.lax.scan(body_fn, x, (params["dec_layers"], ckv[0], ckv[1]))
+    x = L.layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"],
+                     cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(L.COMPUTE_DTYPE),
+                        params["embed"]["table"].astype(L.COMPUTE_DTYPE))
+    return logits, kvs, ckv
+
+
+def forward(params, cfg: ArchConfig, batch, *, tp: int = 16):
+    enc = encode(params, cfg, batch["frames"], tp=tp)
+    logits, _, _ = decode_train(params, cfg, batch["tokens"], enc, tp=tp)
+    return logits, 0.0
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, tp: int = 16) -> Array:
+    logits, _ = forward(params, cfg, batch, tp=tp)
+    return L.cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:],
+                                vocab_real=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch_size: int, cache_len: int,
+               tp: int = 16):
+    layout = _layout(cfg, tp)
+    hd = cfg.head_dim_
+    Ld, F = cfg.num_layers, cfg.enc_frames
+    return {
+        "k": jnp.zeros((Ld, batch_size, cache_len, layout.kv_padded, hd),
+                       L.COMPUTE_DTYPE),
+        "v": jnp.zeros((Ld, batch_size, cache_len, layout.kv_padded, hd),
+                       L.COMPUTE_DTYPE),
+        "xk": jnp.zeros((Ld, batch_size, F, layout.kv_padded, hd),
+                        L.COMPUTE_DTYPE),
+        "xv": jnp.zeros((Ld, batch_size, F, layout.kv_padded, hd),
+                        L.COMPUTE_DTYPE),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg: ArchConfig, *, seq_shard: bool = False):
+    kv = logical("layers", "batch", None, "kv_heads", "head_dim",
+                 name="cache.kv")
+    return {"k": kv, "v": kv, "xk": kv, "xv": kv,
+            "pos": logical(name="cache.pos")}
+
+
+def prefill(params, cfg: ArchConfig, batch, *, tp: int = 16,
+            cache_len: int | None = None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc = encode(params, cfg, batch["frames"], tp=tp)
+    logits, kvs, ckv = decode_train(params, cfg, tokens, enc, tp=tp,
+                                    collect_kv=True)
+    k, v = kvs
+    Skv = cache_len or S
+    if k.shape[2] < Skv:
+        padn = Skv - k.shape[2]
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, padn), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, padn), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v, "xk": ckv[0], "xv": ckv[1],
+             "pos": jnp.asarray(S, jnp.int32)}
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: Array, *,
+                tp: int = 16):
+    layout = _layout(cfg, tp)
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens)
+    D = cfg.d_model
+    # sinusoidal position of the current token
+    pe_table = jnp.asarray(sinusoid_positions(cache["k"].shape[2] + 1, D))
+    x = x + jax.lax.dynamic_slice_in_dim(
+        pe_table, jnp.minimum(pos, pe_table.shape[0] - 1), 1, 0
+    )[None].astype(x.dtype)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    Skv = cache["k"].shape[2]
+    slot = jnp.minimum(pos, Skv - 1)
+
+    def body(h, lc):
+        lp, kc, vc, kx, vx = lc
+        hn = L.layer_norm(h, lp["ln1"]["scale"], lp["ln1"]["bias"],
+                          cfg.norm_eps)
+        q, k, v = L.qkv_project(lp["self_attn"], hn, layout,
+                                positions=positions, rope_theta=None)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        o = L.attention_decode(q, kc, vc, layout,
+                               cur_len=jnp.full((B,), jnp.minimum(pos + 1, Skv)))
+        h = h + L.attn_output(lp["self_attn"], o)
+        hn = L.layer_norm(h, lp["ln_x"]["scale"], lp["ln_x"]["bias"],
+                          cfg.norm_eps)
+        cd = L.COMPUTE_DTYPE
+        qx = jnp.einsum("bsd,dhk->bshk", hn.astype(cd),
+                        lp["cross_attn"]["wq"].astype(cd))
+        if "bq" in lp["cross_attn"]:
+            qx = qx + lp["cross_attn"]["bq"].astype(cd)
+        ox = L.attention_decode(qx, kx, vx, layout,
+                                cur_len=jnp.full((B,), kx.shape[1]))
+        h = h + L.attn_output(lp["cross_attn"], ox)
+        hn = L.layer_norm(h, lp["ln2"]["scale"], lp["ln2"]["bias"],
+                          cfg.norm_eps)
+        h = h + L.gelu_mlp(lp["mlp"], hn)
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    h = L.layer_norm(h, params["dec_ln"]["scale"], params["dec_ln"]["bias"],
+                     cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h.astype(L.COMPUTE_DTYPE),
+                        params["embed"]["table"].astype(L.COMPUTE_DTYPE))
+    new_cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                 "pos": pos + 1}
+    return logits[:, 0], new_cache

@@ -1,0 +1,59 @@
+"""Adam / AdamW over arbitrary pytrees (no optax in this container).
+
+API mirrors the (init, update) gradient-transformation style so it composes
+with the wrappers in :mod:`repro.optim.grad` (clipping, accumulation,
+compression).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: object        # pytree like params
+    nu: object
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0           # AdamW-style decoupled decay
+    clamp: tuple | None = None          # optional (lo, hi) param clamp
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+        return AdamState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state: AdamState, params):
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            new = p - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                            + self.weight_decay * p)
+            if self.clamp is not None:
+                new = jnp.clip(new, self.clamp[0], self.clamp[1])
+            return new
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamState(step, mu, nu)

@@ -1,0 +1,39 @@
+"""LR schedules: StepLR (paper §III), warmup-cosine, constant.
+
+Schedules are ``step -> lr`` callables over the *optimizer step* counter;
+`steps_per_epoch` converts the paper's epoch-based StepLR to step units.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_lr(base_lr: float, step_size_epochs: int, gamma: float,
+            steps_per_epoch: int):
+    """Paper §III: StepLR(step_size=30, gamma=0.1) on epochs.
+
+    lr = base_lr * gamma ** floor(epoch / step_size_epochs).
+    """
+    def fn(step):
+        epoch = step.astype(jnp.float32) / float(max(1, steps_per_epoch))
+        k = jnp.floor(epoch / float(step_size_epochs))
+        return jnp.asarray(base_lr, jnp.float32) * (gamma ** k)
+    return fn
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, float(warmup_steps))
+        prog = jnp.clip((s - warmup_steps) /
+                        jnp.maximum(1.0, float(total_steps - warmup_steps)),
+                        0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup_steps, warm, cos)
+    return fn

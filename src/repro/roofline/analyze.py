@@ -1,0 +1,202 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Sources:
+* ``compiled.cost_analysis()``  -> per-device HLO FLOPs and bytes accessed
+* optimized HLO text            -> collective wire bytes (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute), with
+  ring-algorithm wire multipliers per op kind and the replica-group size
+  parsed from the op attributes.
+
+Terms (seconds, per chip; TPU v5e constants from launch.mesh):
+    compute    = flops_per_chip / 197e12
+    memory     = hbm_bytes_per_chip / 819e9
+    collective = wire_bytes_per_chip / (links * 50e9)
+
+The optimized HLO of an SPMD-partitioned module is the *per-device*
+program, so shapes parsed from it are already per-chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# effective wire bytes per device, as a multiple of the (per-device) payload
+# bytes, for bidirectional-ring implementations with group size n:
+#   all-gather(out B): receives (n-1)/n * B
+#   reduce-scatter(in B): sends/receives (n-1)/n * B
+#   all-reduce(B): RS + AG = 2 (n-1)/n * B
+#   all-to-all(B): (n-1)/n * B
+#   collective-permute(B): B
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[2,4096,512]{...}' -> byte count.  Token shapes 'u32[]' ok."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    if dt not in DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[dt]
+
+
+def _tuple_bytes(result: str) -> int:
+    """Result type may be a tuple '(f32[..], f32[..])' or single shape."""
+    result = result.strip()
+    if result.startswith("("):
+        return sum(_shape_bytes(s) for s in result[1:-1].split(","))
+    return _shape_bytes(result)
+
+
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:                                   # [num_groups, group_size]<=[...]
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(1, len([t for t in m.group(1).split(",") if t.strip()]))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    payload_bytes: dict                     # per-device payload per op kind
+    wire_bytes: float                       # ring-effective wire bytes/device
+
+    def total_payload(self) -> float:
+        return float(sum(self.payload_bytes.values()))
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    counts: dict = {}
+    payload: dict = {}
+    wire = 0.0
+    # `-done` ops repeat the shape of `-start`; count only starts + sync ops.
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result, kind = m.group(1), m.group(2)
+        b = _tuple_bytes(result)
+        n = _group_size(line, total_devices)
+        if n <= 1:
+            continue
+        counts[kind] = counts.get(kind, 0) + 1
+        payload[kind] = payload.get(kind, 0) + b
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            wire += 2 * frac * b
+        elif kind == "collective-permute":
+            wire += b
+        elif kind == "reduce-scatter":
+            # result is the scattered (small) shard; wire moves ~n shards
+            wire += frac * b * n
+        else:                               # all-gather, all-to-all
+            wire += frac * b
+    return CollectiveStats(counts, payload, wire)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    chips: int
+    links: int = 4                          # v5e: 4 ICI links per chip (2D torus x2 dirs)
+
+    def seconds(self) -> dict:
+        from ..launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK
+        t_c = self.flops_per_chip / PEAK_FLOPS_BF16
+        t_m = self.hbm_bytes_per_chip / HBM_BW
+        t_x = self.wire_bytes_per_chip / (self.links * ICI_BW_PER_LINK)
+        dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+        return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+                "bound": dom[1],
+                "step_s_lower_bound": max(t_c, t_m, t_x)}
+
+
+def analyze(compiled, total_devices: int, hlo_text: str | None = None) -> dict:
+    """Collect cost/memory/collective stats from a compiled executable.
+
+    Primary costing comes from the trip-count-aware HLO analyzer
+    (roofline.hlo_costs) — XLA's own cost_analysis counts while-loop
+    bodies once, which under-reports scanned models by the layer count;
+    the raw XLA numbers are kept in the record for reference.
+    """
+    from .hlo_costs import analyze_hlo
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    costs = analyze_hlo(text, total_devices)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(ma, "generated_code_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0) or 0),
+        }
+    except Exception as e:                                  # pragma: no cover
+        mem = {"error": str(e)}
+    terms = RooflineTerms(costs.flops, costs.hbm_bytes, costs.coll_wire,
+                          total_devices)
+    return {
+        "flops_per_chip": costs.flops,
+        "hbm_bytes_per_chip": costs.hbm_bytes,
+        "collectives": {
+            "counts": costs.coll_counts,
+            "payload_bytes": costs.coll_payload,
+            "wire_bytes_per_chip": costs.coll_wire,
+        },
+        "xla_cost_analysis": {"flops": xla_flops, "bytes_accessed": xla_hbm},
+        "memory_analysis": mem,
+        "roofline": terms.seconds(),
+    }
+
+
+def model_flops(cfg, shape, *, include_backward: bool) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); forward = 2*N*D."""
+    n = cfg.num_active_params() if cfg.family == "moe" else cfg.num_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens

@@ -1,0 +1,4 @@
+from . import checkpoint, fault, straggler
+from .checkpoint import save, restore, restore_latest, latest_step
+from .fault import Supervisor, RestartPolicy, PreemptionHandler, FaultInjector, TrainHandle
+from .straggler import StragglerMonitor, StragglerEvent

@@ -1,0 +1,167 @@
+"""Mesh-elastic sharded checkpointing (no orbax in this container).
+
+Layout on disk:
+    <dir>/step_<N>/
+        manifest.json     # treedef paths, shapes, dtypes, step, extra
+                          # metadata (data-iterator state, config digest),
+                          # sha256 of every shard file
+        <leafpath>.npy    # one file per pytree leaf (full logical array)
+    <dir>/step_<N>.COMMITTED   # atomic commit marker (written last)
+
+Design points for 1000+-node deployments (scaled down to this container):
+
+* **atomic**: writes go to ``step_<N>.tmp-<pid>`` and are renamed after
+  the commit marker's shard hashes are fully written — a preempted writer
+  never corrupts the latest checkpoint;
+* **mesh-elastic**: leaves are stored as full logical arrays
+  (``jax.device_get`` assembles sharded arrays); ``restore`` re-shards
+  onto whatever mesh/sharding the caller provides, so restore works onto
+  a different topology than the one that saved (tested 1<->4<->8 devices);
+* **integrity**: sha256 per shard file, verified on restore;
+* **resumable input pipeline**: the data-iterator state rides in the
+  manifest (``extra``).
+
+At real pod scale the same layout maps to per-host shard files keyed by
+``jax.process_index()`` + a distributed commit barrier; the single-host
+implementation keeps those seams explicit (``_leaf_files``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        name = "/".join(_key_str(k) for k in kp)
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _sha256(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def save(directory: str | os.PathLike, step: int, tree, *,
+         extra: dict | None = None) -> Path:
+    """Atomically save a pytree checkpoint.  Returns the final path."""
+    base = Path(directory)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:08d}"
+    tmp = base / f"step_{step:08d}.tmp-{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    manifest: dict = {"step": step, "extra": extra or {},
+                      "created": time.time(), "leaves": {}}
+    for name, leaf in _leaf_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        fn = name.replace("/", "__") + ".npy"
+        np.save(tmp / fn, arr)
+        manifest["leaves"][name] = {
+            "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha256": _sha256(tmp / fn),
+        }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    marker = base / f"step_{step:08d}.COMMITTED"
+    marker.write_text(str(time.time()))
+    return final
+
+
+def latest_step(directory: str | os.PathLike) -> int | None:
+    base = Path(directory)
+    if not base.exists():
+        return None
+    steps = []
+    for marker in base.glob("step_*.COMMITTED"):
+        s = int(marker.stem.split("_")[1])
+        if (base / f"step_{s:08d}" / "manifest.json").exists():
+            steps.append(s)
+    return max(steps) if steps else None
+
+
+def restore(directory: str | os.PathLike, step: int, like, *,
+            shardings=None, verify: bool = True):
+    """Restore a checkpoint into the structure of ``like``.
+
+    ``shardings``: optional pytree of NamedShardings (same treedef) to
+    place leaves onto — this is what makes restore mesh-elastic.
+    Returns (tree, extra).
+    """
+    base = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((base / "manifest.json").read_text())
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(shardings)[0]
+    leaves = []
+    for i, (kp, leaf) in enumerate(flat):
+        name = "/".join(_key_str(k) for k in kp)
+        meta = manifest["leaves"].get(name)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        path = base / meta["file"]
+        if verify and _sha256(path) != meta["sha256"]:
+            raise IOError(f"checksum mismatch for {name} ({path})")
+        arr = np.load(path)
+        want_shape = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"shape mismatch for {name}: ckpt {arr.shape} vs {want_shape}")
+        if shard_flat is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest["extra"]
+
+
+def restore_latest(directory, like, *, shardings=None):
+    s = latest_step(directory)
+    if s is None:
+        return None, None, None
+    tree, extra = restore(directory, s, like, shardings=shardings)
+    return s, tree, extra
+
+
+def garbage_collect(directory: str | os.PathLike, keep: int = 3) -> None:
+    """Delete all but the newest ``keep`` committed checkpoints (plus any
+    orphaned tmp dirs from crashed writers)."""
+    base = Path(directory)
+    if not base.exists():
+        return
+    for tmp in base.glob("step_*.tmp-*"):
+        shutil.rmtree(tmp, ignore_errors=True)
+    steps = sorted(
+        int(m.stem.split("_")[1]) for m in base.glob("step_*.COMMITTED"))
+    for s in steps[:-keep] if keep else steps:
+        shutil.rmtree(base / f"step_{s:08d}", ignore_errors=True)
+        (base / f"step_{s:08d}.COMMITTED").unlink(missing_ok=True)

@@ -1,0 +1,170 @@
+"""Logical-axis sharding rules -> PartitionSpec / NamedSharding.
+
+Every parameter and activation in the model zoo is annotated with *logical*
+axis names ("embed", "q_heads", "ff", ...).  This module maps logical names
+onto physical mesh axes per the production parallelism plan (DESIGN.md §7):
+
+    data-parallel + FSDP     ->  ("pod", "data")   (pod only when present)
+    tensor parallel          ->  ("model",)
+    sequence parallel (SP)   ->  ("data",)  for long-context inference
+
+with a *divisibility fallback*: if a tensor dimension is not divisible by
+the product of its assigned mesh axes, that dimension degrades to
+replication (and the event is recorded so lowering logs it).  This is what
+keeps every (arch x shape x mesh) dry-run cell compilable even for awkward
+head counts / vocab sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+logger = logging.getLogger(__name__)
+
+# ---------------------------------------------------------------------------
+# Logical rules.  Order matters only for documentation; lookup is by name.
+# "fsdp" is resolved to the mesh's data-ish axes at spec-build time.
+# ---------------------------------------------------------------------------
+
+#: logical axis -> physical mesh axis-or-axes (None = replicate)
+DEFAULT_RULES: dict[str, object] = {
+    # parameter axes
+    "layers": None,            # scan-stacked layer dim: never sharded
+    "vocab": "model",          # embedding/lm-head vocab dim: TP
+    "embed": "fsdp",           # d_model dim of params: FSDP (ZeRO-3)
+    "embed_r": None,           # d_model dim where FSDP would double-shard
+    "q_heads": "model",        # attention query heads: TP
+    "kv_heads": "model",       # attention kv heads (padded/repeated): TP
+    "head_dim": None,
+    "ff": "model",             # MLP hidden: TP
+    "experts": None,           # MoE expert dim: FSDP'd via embed dim instead
+    "experts_ep": "model",     # MoE EP: experts shard over the model axis
+    "ssm_heads": "model",      # mamba2 heads: TP
+    "ssm_state": None,
+    "conv_dim": "model",
+    "lru": "model",            # RG-LRU width: TP
+    "norm": None,              # norm scales: replicated
+    # activation axes
+    "batch": "dp",             # global batch: DP  (pod x data)
+    "seq": None,               # sequence: replicated by default
+    "seq_sp": "data",          # sequence-parallel shards (long-context)
+    "act_embed": None,
+    "act_heads": "model",
+    "act_ff": "model",
+    "act_vocab": "model",
+    "kv_seq": None,            # kv-cache seq dim (decode)
+    "kv_seq_sp": "data",       # kv-cache seq dim, sequence-sharded
+}
+
+
+def _resolve(axis: object, mesh: Mesh) -> tuple[str, ...]:
+    """Resolve a rule value to a tuple of physical mesh axis names."""
+    if axis is None:
+        return ()
+    names = mesh.axis_names
+    if axis == "fsdp" or axis == "dp":
+        # pod composes with data when present.
+        return tuple(a for a in ("pod", "data") if a in names)
+    if isinstance(axis, (tuple, list)):
+        return tuple(a for a in axis if a in names)
+    return (axis,) if axis in names else ()
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclasses.dataclass
+class FallbackEvent:
+    tensor: str
+    dim: int
+    logical: str
+    wanted: tuple
+    size: int
+    divisor: int
+
+
+class Partitioner:
+    """Builds PartitionSpecs from logical axis annotations for one mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Mapping[str, object] | None = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        self.fallbacks: list[FallbackEvent] = []
+
+    def spec(self, logical: Sequence[str | None], shape: Sequence[int] | None = None,
+             name: str = "?") -> P:
+        """PartitionSpec for a tensor with the given logical axes.
+
+        If ``shape`` is provided, dimensions not divisible by their mesh
+        axes degrade to replication (recorded in ``self.fallbacks``).
+        """
+        parts = []
+        used: set[str] = set()
+        for d, ax in enumerate(logical):
+            if ax is None:
+                parts.append(None)
+                continue
+            phys = _resolve(self.rules.get(ax, None), self.mesh)
+            # an axis may appear at most once in a PartitionSpec
+            phys = tuple(a for a in phys if a not in used)
+            if not phys:
+                parts.append(None)
+                continue
+            if shape is not None:
+                div = _axes_size(self.mesh, phys)
+                if div > 1 and shape[d] % div != 0:
+                    self.fallbacks.append(FallbackEvent(
+                        name, d, ax, phys, shape[d], div))
+                    logger.info("sharding fallback: %s dim %d (%s=%d) not "
+                                "divisible by %s (=%d); replicating",
+                                name, d, ax, shape[d], phys, div)
+                    parts.append(None)
+                    continue
+            used.update(phys)
+            parts.append(phys if len(phys) > 1 else phys[0])
+        return P(*parts)
+
+    def sharding(self, logical: Sequence[str | None],
+                 shape: Sequence[int] | None = None,
+                 name: str = "?") -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape, name))
+
+    # -- pytree helpers ------------------------------------------------------
+
+    def tree_shardings(self, abstract_params, logical_tree):
+        """Map a pytree of abstract arrays + parallel logical-axes pytree
+        (tuples of logical names, same treedef) to NamedShardings."""
+        def one(leaf, logical):
+            path = getattr(logical, "name", "?")
+            return self.sharding(tuple(logical), tuple(leaf.shape), path)
+        return jax.tree.map(one, abstract_params, logical_tree,
+                            is_leaf=lambda x: isinstance(x, LogicalAxes))
+
+
+class LogicalAxes(tuple):
+    """A tuple of logical axis names acting as a pytree *leaf*."""
+
+    name: str = "?"
+
+    def __new__(cls, axes: Sequence[str | None], name: str = "?"):
+        obj = super().__new__(cls, axes)
+        obj.name = name
+        return obj
+
+    def __repr__(self):
+        return f"LogicalAxes({tuple(self)}, name={self.name!r})"
+
+
+def logical(*axes: str | None, name: str = "?") -> LogicalAxes:
+    return LogicalAxes(axes, name)

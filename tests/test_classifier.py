@@ -1,0 +1,48 @@
+"""Classification logic: popcount groups + argmax tie-breaking."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.classifier import (group_popcount, predict, accuracy,
+                                   cross_entropy, logits_from_counts)
+
+
+def test_group_popcount():
+    bits = jnp.asarray([[1, 0, 1, 1, 0, 0],
+                        [1, 1, 1, 1, 1, 1]], jnp.float32)
+    counts = group_popcount(bits, 3)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  [[1, 2, 0], [2, 2, 2]])
+
+
+def test_argmax_tie_lower_index():
+    """Paper §IV: equal popcounts resolve to the lower class index."""
+    counts = jnp.asarray([[3, 3, 1], [0, 2, 2], [5, 5, 5]], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(predict(counts)), [0, 1, 0])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 8), st.integers(1, 64))
+def test_popcount_matches_numpy(classes, group, batch):
+    rng = np.random.default_rng(batch)
+    bits = rng.integers(0, 2, (batch, classes * group)).astype(np.float32)
+    counts = np.asarray(group_popcount(jnp.asarray(bits), classes))
+    expect = bits.reshape(batch, classes, group).sum(-1)
+    np.testing.assert_array_equal(counts, expect)
+    # hardware argmax semantics == numpy argmax (first max wins)
+    np.testing.assert_array_equal(
+        np.asarray(predict(jnp.asarray(counts))), counts.argmax(1))
+
+
+def test_cross_entropy_sane():
+    logits = jnp.asarray([[10.0, 0.0, 0.0]])
+    labels = jnp.asarray([0])
+    assert float(cross_entropy(logits, labels)) < 1e-3
+    assert float(cross_entropy(-logits, labels)) > 5.0
+
+
+def test_temperature_scaling():
+    counts = jnp.asarray([[4.0, 2.0]])
+    np.testing.assert_allclose(
+        np.asarray(logits_from_counts(counts, 2.0)), [[2.0, 1.0]])

@@ -1,0 +1,38 @@
+"""Multi-layer DWN stacks ([13] allows them; the paper's JSC models use a
+single LUT layer) — framework-level support check."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import JSC_PRESETS, train_dwn, freeze, eval_accuracy_hard
+from repro.core.model import DWNConfig, init_dwn, apply_train, apply_hard
+from repro.data.jsc import load_jsc
+
+
+def test_two_layer_forward_and_freeze():
+    cfg = DWNConfig(lut_counts=(120, 50))
+    data = load_jsc(1024, 256)
+    params, buffers = init_dwn(jax.random.PRNGKey(0), cfg, data.x_train)
+    x = jnp.asarray(data.x_train[:32])
+    logits = apply_train(params, buffers, cfg, x)
+    assert logits.shape == (32, 5)
+    assert np.isfinite(np.asarray(logits)).all()
+    # layer 1 candidates = thermometer bits; layer 2 candidates = layer-1 out
+    assert params["layers"][0]["scores"].shape[-1] == 16 * 200
+    assert params["layers"][1]["scores"].shape[-1] == 120
+    fr = freeze(params, buffers, cfg)
+    counts = apply_hard(fr, x)
+    assert counts.shape == (32, 5)
+
+
+def test_two_layer_trains():
+    cfg = DWNConfig(lut_counts=(80, 50))
+    data = load_jsc(2000, 500)
+    res = train_dwn(cfg, data, epochs=3, batch=128, lr=3e-3, verbose=False)
+    fr = freeze(res.params, res.buffers, cfg)
+    acc = eval_accuracy_hard(fr, data.x_test, data.y_test)
+    assert acc > 0.3                     # well above 20% chance in 3 epochs
+    assert np.isfinite(res.history[-1]["loss"])

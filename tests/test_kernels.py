@@ -1,0 +1,99 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.thermometer import ops as th_ops
+from repro.kernels.thermometer.ref import thermometer_ref
+from repro.kernels.lut_eval import ops as lut_ops
+from repro.kernels.lut_eval.ref import lut_eval_ref
+from repro.kernels.popcount import ops as pc_ops
+from repro.kernels.popcount.ref import popcount_ref, classify_ref
+from repro.kernels.fused import ops as f_ops
+from repro.kernels.fused.ref import fused_dwn_ref
+
+
+def _xth(B, F, T, seed=0, dtype=jnp.float32):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(k1, (B, F), dtype, minval=-1, maxval=1)
+    th = jnp.sort(jax.random.uniform(k2, (F, T), dtype, minval=-1,
+                                     maxval=1), axis=1)
+    return x, th
+
+
+@pytest.mark.parametrize("B,F,T", [(8, 4, 32), (37, 16, 200), (256, 16, 200),
+                                   (5, 3, 7), (64, 1, 128)])
+def test_thermometer_shapes(B, F, T):
+    x, th = _xth(B, F, T, seed=B)
+    out = th_ops.encode(x, th, flatten=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(thermometer_ref(x, th)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_thermometer_dtypes(dtype):
+    x, th = _xth(16, 4, 64, seed=1, dtype=jnp.float32)
+    x, th = x.astype(dtype), th.astype(dtype)
+    out = th_ops.encode(x.astype(jnp.float32), th.astype(jnp.float32),
+                        flatten=False, interpret=True)
+    ref = thermometer_ref(x.astype(jnp.float32), th.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("B,m,n,C", [(16, 10, 6, 320), (33, 50, 6, 3200),
+                                     (8, 7, 4, 64), (128, 360, 6, 3200)])
+def test_lut_eval_shapes(B, m, n, C):
+    key = jax.random.PRNGKey(m)
+    bits = jax.random.bernoulli(key, 0.5, (B, C)).astype(jnp.float32)
+    mapping = jax.random.randint(key, (m, n), 0, C)
+    tables = jax.random.randint(key, (m, 2 ** n), 0, 2).astype(jnp.float32)
+    out = lut_ops.evaluate(bits, mapping, tables, interpret=True)
+    ref = lut_eval_ref(bits, mapping, tables)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,classes,group", [(16, 5, 2), (37, 5, 72),
+                                             (512, 10, 13), (4, 2, 1)])
+def test_popcount_shapes(B, classes, group):
+    key = jax.random.PRNGKey(B + classes)
+    bits = jax.random.bernoulli(key, 0.4, (B, classes * group)) \
+        .astype(jnp.float32)
+    counts, idx = pc_ops.classify(bits, classes, interpret=True)
+    rc, ri = classify_ref(bits, classes)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+
+
+def test_popcount_tie_break_lower_index():
+    bits = jnp.asarray([[1, 1, 1, 1, 0, 0]], jnp.float32)  # counts 2,2,0
+    counts, idx = pc_ops.classify(bits, 3, interpret=True)
+    assert int(idx[0]) == 0
+
+
+@pytest.mark.parametrize("B,F,T,m", [(8, 4, 32, 10), (37, 16, 200, 50),
+                                     (64, 16, 200, 360)])
+def test_fused_shapes(B, F, T, m):
+    x, th = _xth(B, F, T, seed=m)
+    key = jax.random.PRNGKey(m)
+    mapping = jax.random.randint(key, (m, 6), 0, F * T)
+    tables = jax.random.randint(key, (m, 64), 0, 2).astype(jnp.float32)
+    out = f_ops.forward(x, th, mapping, tables, 5, interpret=True)
+    ref = fused_dwn_ref(x, th, mapping, tables, 5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_fused_agrees_with_staged_pipeline():
+    """fused == thermometer -> lut_eval -> popcount, kernel to kernel."""
+    x, th = _xth(24, 16, 200, seed=9)
+    key = jax.random.PRNGKey(9)
+    mapping = jax.random.randint(key, (50, 6), 0, 3200)
+    tables = jax.random.randint(key, (50, 64), 0, 2).astype(jnp.float32)
+    bits = th_ops.encode(x, th, interpret=True)
+    stage = pc_ops.classify(
+        lut_ops.evaluate(bits, mapping, tables, interpret=True), 5,
+        interpret=True)[0]
+    fused = f_ops.forward(x, th, mapping, tables, 5, interpret=True)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(stage),
+                               atol=1e-4)

@@ -1,0 +1,135 @@
+"""Runtime: checkpoint roundtrip/atomicity, supervisor crash-resume,
+straggler monitor."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.fault import (Supervisor, RestartPolicy, FaultInjector,
+                                 TrainHandle, PreemptionHandler)
+from repro.runtime.straggler import StragglerMonitor
+
+
+def _state(v=0.0):
+    return {"w": jnp.full((4, 3), v), "opt": {"mu": jnp.zeros(5),
+                                              "step": jnp.asarray(7)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    s = _state(1.5)
+    ckpt.save(tmp_path, 3, s, extra={"data": {"step": 3}})
+    assert ckpt.latest_step(tmp_path) == 3
+    out, extra = ckpt.restore(tmp_path, 3, jax.eval_shape(lambda: s))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(s["w"]))
+    assert extra == {"data": {"step": 3}}
+
+
+def test_checkpoint_integrity_check(tmp_path):
+    s = _state()
+    path = ckpt.save(tmp_path, 1, s)
+    # corrupt one shard
+    f = next(path.glob("*.npy"))
+    f.write_bytes(b"corrupt" + f.read_bytes()[7:])
+    with pytest.raises(IOError):
+        ckpt.restore(tmp_path, 1, s)
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    for step in (1, 2, 3, 4):
+        ckpt.save(tmp_path, step, _state(step))
+    ckpt.garbage_collect(tmp_path, keep=2)
+    assert ckpt.latest_step(tmp_path) == 4
+    assert not (tmp_path / "step_00000001").exists()
+    out, _ = ckpt.restore(tmp_path, 3, _state())
+    assert float(out["w"][0, 0]) == 3.0
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    """A tmp dir from a crashed writer is never picked up."""
+    s = _state()
+    ckpt.save(tmp_path, 1, s)
+    bogus = tmp_path / "step_00000009.tmp-999"
+    bogus.mkdir()
+    (bogus / "garbage.npy").write_bytes(b"xx")
+    assert ckpt.latest_step(tmp_path) == 1
+    ckpt.garbage_collect(tmp_path, keep=3)
+    assert not bogus.exists()
+
+
+def test_supervisor_crash_resume_deterministic(tmp_path):
+    """Crashes at injected steps; the final state must equal the
+    uninterrupted run (checkpoint/restart correctness)."""
+
+    def run(crash_steps, d):
+        inj = FaultInjector(crash_steps)
+
+        def step(handle: TrainHandle) -> TrainHandle:
+            inj.maybe_crash(handle.step)
+            w = handle.state["w"] + 1.0
+            handle.state = {"w": w}
+            handle.step += 1
+            return handle
+
+        sup = Supervisor(str(d), save_every=2,
+                         policy=RestartPolicy(max_restarts=10, backoff_s=0))
+        h = sup.run(step, init_state={"w": jnp.zeros(2)}, total_steps=9)
+        return np.asarray(h.state["w"]), h.step, sup.restarts
+
+    w_clean, s_clean, _ = run(set(), tmp_path / "clean")
+    w_faulty, s_faulty, restarts = run({3, 7}, tmp_path / "faulty")
+    assert restarts == 2
+    assert s_clean == s_faulty == 9
+    np.testing.assert_array_equal(w_clean, w_faulty)
+
+
+def test_supervisor_restart_budget(tmp_path):
+    def step(handle):
+        raise RuntimeError("always broken")
+
+    sup = Supervisor(str(tmp_path), save_every=2,
+                     policy=RestartPolicy(max_restarts=2, backoff_s=0))
+    with pytest.raises(RuntimeError):
+        sup.run(step, init_state={"w": jnp.zeros(1)}, total_steps=5)
+    assert sup.restarts == 3        # 2 allowed + the aborting one
+
+
+def test_supervisor_preemption_drains(tmp_path):
+    pre = PreemptionHandler(install=False)
+
+    def step(handle):
+        handle.state = {"w": handle.state["w"] + 1}
+        handle.step += 1
+        if handle.step == 4:
+            pre.requested = True
+        return handle
+
+    sup = Supervisor(str(tmp_path), save_every=100, preemption=pre)
+    h = sup.run(step, init_state={"w": jnp.zeros(1)}, total_steps=50)
+    assert h.step == 4
+    assert ckpt.latest_step(tmp_path) == 4    # drained with a checkpoint
+
+
+def test_straggler_monitor_flags_outliers():
+    fired = []
+    mon = StragglerMonitor(window=32, z_threshold=4.0, patience=2,
+                           min_samples=8, action=fired.append)
+    for _ in range(20):
+        mon.report(0.100)
+    assert mon.report(0.500) is not None       # flagged
+    assert not fired                           # patience=2 not yet met
+    mon.report(0.600)
+    assert fired and fired[0].z > 4
+    # baseline not poisoned by the slow samples
+    assert sorted(mon.times)[len(mon.times) // 2] == pytest.approx(0.1)
+
+
+def test_straggler_monitor_tolerates_jitter():
+    mon = StragglerMonitor(min_samples=8)
+    rng = np.random.default_rng(0)
+    events = [mon.report(0.1 + 0.002 * rng.standard_normal())
+              for _ in range(100)]
+    assert all(e is None for e in events)

@@ -1,0 +1,98 @@
+"""Thermometer encoding: unit + property tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.thermometer import (ThermometerSpec, fit_thresholds, encode,
+                                    encode_np, quantize_fixed_point,
+                                    quantize_thresholds, used_threshold_mask,
+                                    distinct_used_thresholds,
+                                    normalize_to_unit, total_bits_for_frac)
+
+
+def _data(n=512, f=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 0.5, (n, f)).astype(np.float32)
+    return normalize_to_unit(x)[0]
+
+
+def test_fit_shapes_and_order():
+    x = _data()
+    for mode in ("uniform", "distributive"):
+        spec = ThermometerSpec(4, 16, mode)
+        th = fit_thresholds(x, spec)
+        assert th.shape == (4, 16)
+        assert (np.diff(th, axis=1) >= 0).all()
+
+
+def test_encode_matches_numpy_twin():
+    x = _data()
+    spec = ThermometerSpec(4, 16, "distributive")
+    th = fit_thresholds(x, spec)
+    a = np.asarray(encode(jnp.asarray(x), jnp.asarray(th)))
+    b = encode_np(x, th)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_thermometer_property():
+    """A thermometer code is a unary staircase: bits sorted descending."""
+    x = _data()
+    spec = ThermometerSpec(4, 32, "distributive")
+    th = fit_thresholds(x, spec)
+    bits = encode_np(x, th, flatten=False)       # (n, F, T)
+    assert ((np.diff(bits, axis=2) <= 0).all())  # monotone within feature
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-1.0, 0.999), st.floats(-1.0, 0.999),
+       st.integers(1, 10))
+def test_encode_order_preserving(a, b, frac):
+    """x <= y implies popcount(enc(x)) <= popcount(enc(y)) per feature."""
+    spec = ThermometerSpec(1, 16, "uniform")
+    th = fit_thresholds(np.zeros((4, 1), np.float32), spec)
+    ea = encode_np(np.array([[a]], np.float32), th).sum()
+    eb = encode_np(np.array([[b]], np.float32), th).sum()
+    if a <= b:
+        assert ea <= eb
+    else:
+        assert ea >= eb
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(-2.0, 2.0), st.integers(1, 12))
+def test_quantize_grid(v, frac):
+    q = float(quantize_fixed_point(np.float32(v), frac))
+    scale = 2.0 ** frac
+    # on-grid and within the signed (1, n) range
+    assert abs(q * scale - round(q * scale)) < 1e-5
+    assert -1.0 <= q <= (scale - 1) / scale
+    assert total_bits_for_frac(frac) == frac + 1
+
+
+def test_quantize_monotone_nonexpansive():
+    v = np.linspace(-1, 1, 1001).astype(np.float32)
+    q = np.asarray(quantize_fixed_point(v, 4))
+    assert (np.diff(q) >= 0).all()
+    assert np.abs(q - np.clip(v, -1, 1 - 2.0 ** -4)).max() <= 2.0 ** -5 + 1e-6
+
+
+def test_used_mask_and_dedup():
+    spec = ThermometerSpec(2, 8)
+    mapping = np.array([[0, 1, 1, 8, 15, 15]])   # uses f0:{0,1}, f1:{0,7}
+    mask = used_threshold_mask(mapping, spec)
+    assert mask.sum() == 4
+    th = np.array([[0.1, 0.12, 0.2, .3, .4, .5, .6, .7],
+                   [0.1, 0.12, 0.2, .3, .4, .5, .6, .71]], np.float32)
+    # at 2 fractional bits 0.1 and 0.12 collide -> dedup
+    n, per = distinct_used_thresholds(th, mask, frac_bits=2)
+    assert n <= 4 and per[0] >= 1
+    n_full, _ = distinct_used_thresholds(th, mask, frac_bits=None)
+    assert n_full == 4
+
+
+def test_normalize_range():
+    x = np.random.default_rng(0).normal(0, 3, (100, 3)).astype(np.float32)
+    xn, lo, hi = normalize_to_unit(x)
+    assert xn.min() >= -1.0 and xn.max() < 1.0
