@@ -32,6 +32,12 @@ for _m, _l in (("dwn-jsc-sm10", 10), ("dwn-jsc-sm50", 50),
 # §Perf hillclimb variants of the serving datapath (lg-2400 target cell)
 import dataclasses as _dc
 
+# Short serving aliases (launch/serve.py --arch dwn-jsc-{sm,md,lg}): the
+# packed fused serving datapath on the paper's size tiers.
+for _m, _l in (("dwn-jsc-sm", 50), ("dwn-jsc-md", 360),
+               ("dwn-jsc-lg", 2400)):
+    register(_dc.replace(_dwn(_m, _l, fused=True), name=_m))
+
 _BASE = _dwn("dwn-jsc-lg2400-x", 2400)
 register(_dc.replace(_BASE, name="dwn-jsc-lg2400-opt1",
                      dwn_datapath="gather"))

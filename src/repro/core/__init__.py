@@ -1,17 +1,22 @@
 """DWN core: the paper's contribution as composable JAX modules."""
 
+from .bitpack import (PackedBits, pack_bits, unpack_bits, pack_bits_np,
+                      unpack_bits_np, popcount_u32, popcount_u32_np,
+                      words_for_bits, group_masks_np)
 from .thermometer import (ThermometerSpec, fit_thresholds, encode, encode_np,
-                          quantize_fixed_point, quantize_thresholds,
-                          quantize_inputs, used_threshold_mask,
-                          distinct_used_thresholds, normalize_to_unit,
-                          total_bits_for_frac)
+                          encode_packed, quantize_fixed_point,
+                          quantize_thresholds, quantize_inputs,
+                          used_threshold_mask, distinct_used_thresholds,
+                          normalize_to_unit, total_bits_for_frac)
 from .lut_layer import (LUTLayerSpec, init_lut_layer, lut_layer_apply,
-                        finalize_mapping, binarize_tables, lut_eval_hard)
-from .classifier import (group_popcount, logits_from_counts, predict,
-                         cross_entropy, accuracy)
+                        finalize_mapping, binarize_tables, lut_eval_hard,
+                        lut_eval_hard_packed)
+from .classifier import (group_popcount, group_popcount_packed,
+                         logits_from_counts, predict, cross_entropy,
+                         accuracy)
 from .model import (DWNConfig, JSC_PRESETS, PAPER_BASELINE_ACC, init_dwn,
                     apply_train, loss_fn, freeze, FrozenDWN, apply_hard,
-                    eval_accuracy_hard)
+                    apply_hard_packed, eval_accuracy_hard)
 from .training import train_dwn, TrainResult, eval_soft
 from .quantize import (ptq_bitwidth_search, finetune_bitwidth_search,
                        PTQResult, FTResult)

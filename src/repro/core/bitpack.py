@@ -1,0 +1,210 @@
+"""Packed-bitplane representation: 32 logical bits per uint32 word.
+
+The float inference path stores every thermometer/LUT bit as a float32 — a
+32x memory blow-up that makes the encode/LUT hot path bandwidth-bound (the
+TPU-side analogue of the paper's "encoding dominates LUT usage" finding).
+This module is the single source of truth for the packed bit-format used by
+``apply_hard_packed`` and the packed Pallas kernels:
+
+Bit-format convention
+---------------------
+* A logical bit-vector of length ``N`` packs along its **last axis** into
+  ``W = ceil(N / 32)`` little-endian words: logical bit ``i`` lives in word
+  ``i >> 5`` at bit position ``i & 31`` (**LSB-first** within a word).
+* When ``N % 32 != 0`` the trailing pad bits of the last word are **zero**;
+  every producer must maintain this invariant (popcounts rely on it).
+* Thermometer outputs pack the *flattened* ``(F*T,)`` bit order — feature-
+  major, bit ``f*T + t`` — so LUT mapping indices address packed words
+  directly as ``(idx >> 5, idx & 31)`` with no per-feature padding.
+
+``PackedBits`` is a pytree (words traced, ``num_bits`` static) so packed
+values flow through ``jax.jit`` unchanged.  NumPy twins (`pack_bits_np`,
+`unpack_bits_np`, `popcount_u32_np`) serve the data-pipeline side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+WORD_BITS = 32
+
+# SWAR popcount constants (Hacker's Delight fig. 5-2).
+_M1, _M2, _M4, _H01 = 0x55555555, 0x33333333, 0x0F0F0F0F, 0x01010101
+
+
+def words_for_bits(num_bits: int) -> int:
+    """ceil(num_bits / 32): uint32 words holding a num_bits-long vector."""
+    return (num_bits + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bits(bits: Array) -> Array:
+    """Pack {0,1} values (..., N) -> (..., ceil(N/32)) uint32, LSB-first.
+
+    Accepts any numeric/bool dtype; any non-zero entry is a set bit.
+    """
+    bits = jnp.asarray(bits)
+    n = bits.shape[-1]
+    w = words_for_bits(n)
+    pad = [(0, 0)] * (bits.ndim - 1) + [(0, w * WORD_BITS - n)]
+    b = jnp.pad((bits != 0).astype(jnp.uint32), pad)
+    b = b.reshape(*bits.shape[:-1], w, WORD_BITS)
+    weights = jnp.left_shift(jnp.uint32(1),
+                             jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: Array, num_bits: int,
+                dtype=jnp.float32) -> Array:
+    """Inverse of :func:`pack_bits`: (..., W) uint32 -> (..., num_bits)."""
+    words = jnp.asarray(words, jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    b = jnp.bitwise_and(jnp.right_shift(words[..., :, None], shifts),
+                        jnp.uint32(1))
+    b = b.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS)
+    return b[..., :num_bits].astype(dtype)
+
+
+def pack_bits_np(bits: np.ndarray) -> np.ndarray:
+    """NumPy twin of :func:`pack_bits` (data-pipeline side)."""
+    bits = np.asarray(bits)
+    n = bits.shape[-1]
+    w = words_for_bits(n)
+    pad = [(0, 0)] * (bits.ndim - 1) + [(0, w * WORD_BITS - n)]
+    b = np.pad((bits != 0).astype(np.uint32), pad)
+    b = b.reshape(*bits.shape[:-1], w, WORD_BITS)
+    weights = (np.uint32(1) << np.arange(WORD_BITS, dtype=np.uint32))
+    return np.sum(b * weights, axis=-1, dtype=np.uint32)
+
+
+def unpack_bits_np(words: np.ndarray, num_bits: int,
+                   dtype=np.float32) -> np.ndarray:
+    """NumPy twin of :func:`unpack_bits`."""
+    words = np.asarray(words, np.uint32)
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    b = (words[..., :, None] >> shifts) & np.uint32(1)
+    b = b.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS)
+    return b[..., :num_bits].astype(dtype)
+
+
+def popcount_u32(v: Array) -> Array:
+    """Per-word popcount of a uint32 array (SWAR; VPU/kernel-safe)."""
+    v = jnp.asarray(v, jnp.uint32)
+    v = v - jnp.bitwise_and(jnp.right_shift(v, 1), jnp.uint32(_M1))
+    v = (jnp.bitwise_and(v, jnp.uint32(_M2))
+         + jnp.bitwise_and(jnp.right_shift(v, 2), jnp.uint32(_M2)))
+    v = jnp.bitwise_and(v + jnp.right_shift(v, 4), jnp.uint32(_M4))
+    return jnp.right_shift(v * jnp.uint32(_H01), 24)
+
+
+def popcount_u32_np(v: np.ndarray) -> np.ndarray:
+    """NumPy twin of :func:`popcount_u32`."""
+    v = np.asarray(v, np.uint32)
+    v = v - ((v >> np.uint32(1)) & np.uint32(_M1))
+    v = (v & np.uint32(_M2)) + ((v >> np.uint32(2)) & np.uint32(_M2))
+    v = (v + (v >> np.uint32(4))) & np.uint32(_M4)
+    return (v * np.uint32(_H01)) >> np.uint32(24)
+
+
+def select_packed_bits(words: Array, word_idx: Array,
+                       bit_off: Array) -> Array:
+    """Read mapped bits out of packed words with shift/AND.
+
+    words (..., W) uint32; word_idx / bit_off (m, n) int32 — the wire's
+    word index ``idx >> 5`` and LSB-first position ``idx & 31``.
+    Returns (..., m, n) int32 {0,1}.  Pure jnp: shared by the core packed
+    path and the Pallas kernels so the addressing convention lives once.
+    """
+    m, n = word_idx.shape
+    g = jnp.take(words, word_idx.reshape(-1), axis=-1)       # (..., m*n)
+    off = bit_off.reshape(-1).astype(jnp.uint32)
+    sel = jnp.bitwise_and(jnp.right_shift(g, off), jnp.uint32(1))
+    return sel.reshape(*words.shape[:-1], m, n).astype(jnp.int32)
+
+
+def lut_addresses(sel: Array) -> Array:
+    """(..., m, n) {0,1} int32 -> (..., m) LUT address via shift/OR."""
+    n = sel.shape[-1]
+    addr = jnp.zeros(sel.shape[:-1], jnp.int32)
+    for i in range(n):
+        addr = jnp.bitwise_or(addr, jnp.left_shift(sel[..., i], i))
+    return addr
+
+
+def masked_group_counts(words: Array, masks: Array) -> Array:
+    """Masked SWAR popcount: words (..., W) uint32, masks (G, W) uint32 ->
+    (..., G) float32 per-group set-bit counts.  The packed classifier core,
+    shared by ``group_popcount_packed`` and the popcount/fused kernels."""
+    masked = jnp.bitwise_and(words[..., None, :], masks)     # (..., G, W)
+    counts = jnp.sum(popcount_u32(masked), axis=-1, dtype=jnp.uint32)
+    return counts.astype(jnp.float32)
+
+
+def group_masks_np(num_bits: int, num_groups: int) -> np.ndarray:
+    """(G, W) uint32 masks selecting each group's contiguous bit-range.
+
+    Group ``g`` owns logical bits ``[g*gs, (g+1)*gs)`` with
+    ``gs = num_bits // num_groups`` — the classifier's class groups.  Word
+    boundaries need not align with group boundaries; masked popcount handles
+    arbitrary ``gs``.
+    """
+    assert num_bits % num_groups == 0, (num_bits, num_groups)
+    gs = num_bits // num_groups
+    w = words_for_bits(num_bits)
+    bit_of = np.arange(w * WORD_BITS)
+    group_of = np.where(bit_of < num_bits, bit_of // gs, -1)
+    masks = np.zeros((num_groups, w), np.uint32)
+    weights = (np.uint32(1) << np.arange(WORD_BITS, dtype=np.uint32))
+    for g in range(num_groups):
+        sel = (group_of == g).reshape(w, WORD_BITS).astype(np.uint32)
+        masks[g] = np.sum(sel * weights, axis=-1, dtype=np.uint32)
+    return masks
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedBits:
+    """A logical bit-vector in packed uint32 words (see module docstring).
+
+    Attributes:
+      words: (..., W) uint32 with W = ceil(num_bits / 32); pad bits zero.
+      num_bits: logical bit count N (static under jit).
+    """
+
+    words: Array
+    num_bits: int
+
+    @classmethod
+    def pack(cls, bits: Array) -> "PackedBits":
+        return cls(pack_bits(bits), bits.shape[-1])
+
+    def unpack(self, dtype=jnp.float32) -> Array:
+        return unpack_bits(self.words, self.num_bits, dtype)
+
+    @property
+    def num_words(self) -> int:
+        return self.words.shape[-1]
+
+    @property
+    def batch_shape(self) -> tuple:
+        return self.words.shape[:-1]
+
+    def tree_flatten(self):
+        return (self.words,), self.num_bits
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+__all__ = [
+    "WORD_BITS", "words_for_bits", "pack_bits", "unpack_bits",
+    "pack_bits_np", "unpack_bits_np", "popcount_u32", "popcount_u32_np",
+    "select_packed_bits", "lut_addresses", "masked_group_counts",
+    "group_masks_np", "PackedBits",
+]

@@ -14,6 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .bitpack import PackedBits, group_masks_np, masked_group_counts
+
 Array = jax.Array
 
 
@@ -22,6 +24,17 @@ def group_popcount(bits: Array, num_classes: int) -> Array:
     B, m = bits.shape
     assert m % num_classes == 0, (m, num_classes)
     return bits.reshape(B, num_classes, m // num_classes).sum(axis=-1)
+
+
+def group_popcount_packed(packed: PackedBits, num_classes: int) -> Array:
+    """Packed twin of :func:`group_popcount`: masked SWAR word popcounts.
+
+    Class groups need not align with word boundaries — each class ANDs a
+    precomputed (classes, W) mask against the packed words and popcounts the
+    result.  Returns float32 counts identical to the float path.
+    """
+    masks = jnp.asarray(group_masks_np(packed.num_bits, num_classes))
+    return masked_group_counts(packed.words, masks)
 
 
 def logits_from_counts(counts: Array, tau: float) -> Array:

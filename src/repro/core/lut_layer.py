@@ -27,6 +27,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .bitpack import PackedBits, select_packed_bits, lut_addresses
+
 Array = jax.Array
 
 
@@ -174,6 +176,27 @@ def finalize_mapping(params) -> Array:
 def binarize_tables(params) -> Array:
     """Freeze truth tables to {0,1} int32 (m, 2^n) — the hardware LUT INIT."""
     return (params["tables"] > 0.0).astype(jnp.int32)
+
+
+def lut_eval_hard_packed(packed: PackedBits, mapping_idx: Array,
+                         tables_bin: Array) -> PackedBits:
+    """Packed twin of :func:`lut_eval_hard`: bits stay in uint32 words.
+
+    A mapped candidate bit ``idx`` is read from word ``idx >> 5`` at bit
+    position ``idx & 31`` (the bitpack convention); the LUT address is then
+    formed with shift/OR — no float math anywhere.  Output is the packed
+    (B, m)-bit layer output.  Bit-exact with the float path:
+    ``lut_eval_hard_packed(p, i, t).unpack() == lut_eval_hard(p.unpack(), i, t)``.
+    """
+    words = packed.words                                     # (B, W) uint32
+    B = words.shape[0]
+    sel = select_packed_bits(words, jnp.right_shift(mapping_idx, 5),
+                             jnp.bitwise_and(mapping_idx, 31))
+    addr = lut_addresses(sel)                                # (B, m)
+    out = jnp.take_along_axis(
+        jnp.broadcast_to(tables_bin[None], (B,) + tables_bin.shape),
+        addr[..., None], axis=-1)[..., 0]                    # (B, m) {0,1}
+    return PackedBits.pack(out)
 
 
 def lut_eval_hard(bits: Array, mapping_idx: Array, tables_bin: Array) -> Array:

@@ -20,12 +20,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .thermometer import (ThermometerSpec, encode, fit_thresholds,
-                          quantize_fixed_point)
+from .thermometer import (ThermometerSpec, encode, encode_packed,
+                          fit_thresholds, quantize_fixed_point)
 from .lut_layer import (LUTLayerSpec, init_lut_layer, lut_layer_apply,
-                        finalize_mapping, binarize_tables, lut_eval_hard)
-from .classifier import (group_popcount, logits_from_counts, cross_entropy,
-                         accuracy, predict)
+                        finalize_mapping, binarize_tables, lut_eval_hard,
+                        lut_eval_hard_packed)
+from .classifier import (group_popcount, group_popcount_packed,
+                         logits_from_counts, cross_entropy, accuracy,
+                         predict)
 
 Array = jax.Array
 
@@ -128,6 +130,23 @@ def apply_hard(frozen: FrozenDWN, x: Array) -> Array:
     for idx, tab in zip(frozen.mapping_idx, frozen.tables_bin):
         bits = lut_eval_hard(bits, jnp.asarray(idx), jnp.asarray(tab))
     return group_popcount(bits, frozen.cfg.num_classes)
+
+
+def apply_hard_packed(frozen: FrozenDWN, x: Array) -> Array:
+    """Packed-bitplane twin of :func:`apply_hard` (counts, bit-exact).
+
+    Same comparisons, same LUT reads, same counts — but every intermediate
+    bit tensor is a ``PackedBits`` of uint32 words (32x smaller than the
+    float path).  ``apply_hard`` stays the oracle; the Pallas fast path is
+    ``repro.kernels.fused.ops.forward_packed``.
+    """
+    if frozen.input_frac_bits is not None:
+        x = quantize_fixed_point(x, frozen.input_frac_bits)
+    packed = encode_packed(x, jnp.asarray(frozen.thresholds))
+    for idx, tab in zip(frozen.mapping_idx, frozen.tables_bin):
+        packed = lut_eval_hard_packed(packed, jnp.asarray(idx),
+                                      jnp.asarray(tab))
+    return group_popcount_packed(packed, frozen.cfg.num_classes)
 
 
 def eval_accuracy_hard(frozen: FrozenDWN, x: np.ndarray, y: np.ndarray,

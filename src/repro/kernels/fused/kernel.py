@@ -20,6 +20,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.bitpack import (WORD_BITS, select_packed_bits, lut_addresses,
+                             masked_group_counts)
+from ..thermometer.kernel import _pack_words
+from ..popcount.kernel import _first_argmax
+
 
 def _fused_kernel(x_ref, th_ref, sel_ref, tab_ref, cls_ref, counts_ref, *,
                   fan_in: int):
@@ -87,3 +92,83 @@ def fused_dwn(x: jax.Array, thresholds: jax.Array, sel_onehot: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, classes), jnp.float32),
         interpret=interpret,
     )(x, thresholds, sel_onehot, tables, class_map)
+
+
+def _fused_packed_kernel(x_ref, th_ref, *refs, num_layers: int):
+    # refs: per layer (widx, boff, tab), then class masks, then the two
+    # output refs appended by pallas_call (counts, idx).
+    #
+    # The whole accelerator on packed words: the encode compare produces
+    # the (B_blk, F, T) bool tile in VMEM, is immediately packed to
+    # (B_blk, F*T/32) uint32 — the only bit representation that persists —
+    # then every LUT layer is gather + shift/AND addressing + table read +
+    # repack, and the classifier is a masked SWAR popcount.  Bits never
+    # touch HBM in any dtype; only the (B, classes) counts leave.
+    cls_ref = refs[3 * num_layers]
+    counts_ref = refs[3 * num_layers + 1]
+    idx_ref = refs[3 * num_layers + 2]
+    x = x_ref[...]                                   # (B_blk, F)
+    th = th_ref[...]                                 # (F, T)
+    B_blk = x.shape[0]
+    bits = (x[:, :, None] > th[None])                # bool, VMEM-resident
+    words = _pack_words(bits.reshape(B_blk, -1), B_blk)
+    for l in range(num_layers):
+        widx = refs[3 * l][...]                      # (m_l, n_l) i32
+        boff = refs[3 * l + 1][...]
+        tab = refs[3 * l + 2][...]                   # (m_l, 2^n_l) i32
+        sel = select_packed_bits(words, widx, boff)
+        addr = lut_addresses(sel)
+        out_bits = jnp.take_along_axis(
+            jnp.broadcast_to(tab[None], (B_blk,) + tab.shape),
+            addr[..., None], axis=-1)[..., 0]
+        words = _pack_words(out_bits, B_blk)
+    mask = cls_ref[...]                              # (classes, W)
+    counts = masked_group_counts(words, mask)
+    counts_ref[...] = counts
+    idx_ref[...] = _first_argmax(counts)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_layers", "block_b",
+                                             "interpret"))
+def fused_dwn_packed(x: jax.Array, thresholds: jax.Array,
+                     layer_arrays: tuple, class_masks: jax.Array, *,
+                     num_layers: int, block_b: int = 256,
+                     interpret: bool = False):
+    """Whole-model packed inference in ONE pallas_call.
+
+    x (B, F); thresholds (F, T) with F*T a 32-multiple; layer_arrays a
+    flat tuple (widx_0, boff_0, tab_0, widx_1, ...) with every m_l a
+    32-multiple; class_masks (classes, W_last) uint32.
+    Returns (counts (B, classes) f32, idx (B,) i32).
+    """
+    B, F = x.shape
+    T = thresholds.shape[1]
+    assert (F * T) % WORD_BITS == 0, (F, T)
+    assert len(layer_arrays) == 3 * num_layers
+    classes, W_last = class_masks.shape
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    kernel = functools.partial(_fused_packed_kernel, num_layers=num_layers)
+    in_specs = [
+        pl.BlockSpec((bb, F), lambda i: (i, 0)),
+        pl.BlockSpec((F, T), lambda i: (0, 0)),
+    ]
+    for arr in layer_arrays:
+        in_specs.append(pl.BlockSpec(
+            arr.shape, lambda i, nd=arr.ndim: (0,) * nd))
+    in_specs.append(pl.BlockSpec((classes, W_last), lambda i: (0, 0)))
+    counts, idx = pl.pallas_call(
+        kernel,
+        grid=(B // bb,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bb, classes), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, classes), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, thresholds, *layer_arrays, class_masks)
+    return counts, idx[:, 0]

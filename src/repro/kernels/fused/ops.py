@@ -5,9 +5,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...core.bitpack import WORD_BITS, group_masks_np
 from ..lut_eval.ref import selection_onehot
-from .kernel import fused_dwn
-from .ref import fused_dwn_ref
+from ..lut_eval.ops import packed_wire_indices
+from .kernel import fused_dwn, fused_dwn_packed
+from .ref import fused_dwn_ref, fused_dwn_packed_ref
 
 
 def _round_up(x: int, m: int) -> int:
@@ -45,4 +47,49 @@ def forward(x: jax.Array, thresholds: jax.Array, mapping: jax.Array,
     return counts[:B]
 
 
-__all__ = ["forward", "fused_dwn_ref"]
+def forward_packed(x: jax.Array, thresholds: jax.Array, mappings, tables,
+                   num_classes: int, *, interpret: bool | None = None):
+    """Whole-accelerator packed DWN inference: features -> (counts, argmax).
+
+    The serving fast path: one fused pallas_call runs encode -> every LUT
+    layer -> group popcount with all bit tensors packed uint32 and
+    VMEM-resident.  ``mappings``/``tables`` are per-layer lists (single
+    arrays accepted for the paper's one-layer JSC models); layer widths are
+    padded to 32-multiples with all-zero LUTs, and the class masks are built
+    from the *logical* final width so padding never mis-counts.
+
+    Requires F*T to be a 32-multiple (true for all JSC presets: 16*200);
+    falls back to the jnp oracle otherwise.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not isinstance(mappings, (list, tuple)):
+        mappings, tables = [mappings], [tables]
+    B, F = x.shape
+    T = thresholds.shape[1]
+    if (F * T) % WORD_BITS != 0:
+        return fused_dwn_packed_ref(x, thresholds, list(mappings),
+                                    list(tables), num_classes)
+    bb = min(256, _round_up(B, 8))
+    Bp = _round_up(B, bb)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+    layer_arrays = []
+    for mp_arr, tb in zip(mappings, tables):
+        m, n = mp_arr.shape
+        mp = _round_up(m, WORD_BITS)
+        widx, boff = packed_wire_indices(mp_arr)
+        layer_arrays += [
+            jnp.pad(widx, ((0, mp - m), (0, 0))),
+            jnp.pad(boff, ((0, mp - m), (0, 0))),
+            jnp.pad(jnp.asarray(tb, jnp.int32), ((0, mp - m), (0, 0))),
+        ]
+    m_last = mappings[-1].shape[0]
+    masks = jnp.asarray(group_masks_np(m_last, num_classes))
+    counts, idx = fused_dwn_packed(xp, thresholds, tuple(layer_arrays),
+                                   masks, num_layers=len(mappings),
+                                   block_b=bb, interpret=interpret)
+    return counts[:B], idx[:B]
+
+
+__all__ = ["forward", "forward_packed", "fused_dwn_ref",
+           "fused_dwn_packed_ref"]

@@ -17,3 +17,19 @@ def fused_dwn_ref(x: jax.Array, thresholds: jax.Array, mapping: jax.Array,
     bits = thermometer_ref(x, thresholds).reshape(x.shape[0], -1)
     out = lut_eval_ref(bits, mapping, tables)
     return popcount_ref(out, num_classes)
+
+
+def fused_dwn_packed_ref(x: jax.Array, thresholds: jax.Array,
+                         mappings, tables, num_classes: int):
+    """Multi-layer float-oracle composition for the packed fused kernel.
+
+    mappings/tables: per-layer lists (single arrays accepted).  Returns
+    (counts, argmax) with the tie-to-lower-index rule.
+    """
+    if not isinstance(mappings, (list, tuple)):
+        mappings, tables = [mappings], [tables]
+    bits = thermometer_ref(x, thresholds).reshape(x.shape[0], -1)
+    for mp, tb in zip(mappings, tables):
+        bits = lut_eval_ref(bits, mp, tb)
+    counts = popcount_ref(bits, num_classes)
+    return counts, jnp.argmax(counts, axis=-1).astype(jnp.int32)

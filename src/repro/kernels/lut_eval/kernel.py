@@ -24,6 +24,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.bitpack import WORD_BITS, select_packed_bits, lut_addresses
+from ..thermometer.kernel import _pack_words
+
 
 def _lut_eval_kernel(bits_ref, sel_ref, tab_ref, out_ref, *, fan_in: int):
     bits = bits_ref[...]                              # (B_blk, C)
@@ -72,3 +75,50 @@ def lut_eval(bits: jax.Array, sel_onehot: jax.Array, tables: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((B, m), jnp.float32),
         interpret=interpret,
     )(bits, sel_onehot, tables)
+
+
+def _lut_eval_packed_kernel(words_ref, widx_ref, boff_ref, tab_ref, out_ref):
+    # words: (B_blk, W_in) uint32; widx/boff: (m, n) i32; tab: (m, 2^n) i32
+    # {0,1}; out: (B_blk, m/32) uint32.  Addresses are formed with
+    # shift/AND on the packed words (core.bitpack helpers — the addressing
+    # convention lives once) — no one-hot matmul, no float bits.
+    words = words_ref[...]
+    widx = widx_ref[...]
+    boff = boff_ref[...]
+    tab = tab_ref[...]
+    B_blk = words.shape[0]
+    sel = select_packed_bits(words, widx, boff)
+    addr = lut_addresses(sel)                                # (B_blk, m)
+    out_bits = jnp.take_along_axis(
+        jnp.broadcast_to(tab[None], (B_blk,) + tab.shape),
+        addr[..., None], axis=-1)[..., 0]                    # (B_blk, m)
+    out_ref[...] = _pack_words(out_bits, B_blk)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lut_eval_packed(words: jax.Array, word_idx: jax.Array,
+                    bit_off: jax.Array, tables: jax.Array, *,
+                    block_b: int = 256, interpret: bool = False) -> jax.Array:
+    """words (B, W_in) uint32; word_idx/bit_off (m, n) i32; tables (m, 2^n)
+    i32 {0,1} -> packed layer output (B, m/32) uint32.  m must be a
+    32-multiple (ops.py pads with zero-table LUTs)."""
+    B = words.shape[0]
+    W_in = words.shape[1]
+    m, n = word_idx.shape
+    A = tables.shape[1]
+    assert m % WORD_BITS == 0, m
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    return pl.pallas_call(
+        _lut_eval_packed_kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, W_in), lambda i: (i, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+            pl.BlockSpec((m, A), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, m // WORD_BITS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m // WORD_BITS), jnp.uint32),
+        interpret=interpret,
+    )(words, word_idx, bit_off, tables)

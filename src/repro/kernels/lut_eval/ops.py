@@ -5,8 +5,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import lut_eval
-from .ref import lut_eval_ref, selection_onehot
+from ...core.bitpack import WORD_BITS, PackedBits
+from .kernel import lut_eval, lut_eval_packed
+from .ref import lut_eval_ref, lut_eval_packed_ref, selection_onehot
 
 
 def _round_up(x: int, m: int) -> int:
@@ -37,4 +38,40 @@ def evaluate(bits: jax.Array, mapping: jax.Array, tables: jax.Array, *,
     return out[:B, :m]
 
 
-__all__ = ["evaluate", "lut_eval_ref", "selection_onehot"]
+def packed_wire_indices(mapping: jax.Array):
+    """(m, n) logical bit indices -> (word_idx, bit_off) per the bitpack
+    convention: word ``idx >> 5``, LSB-first position ``idx & 31``."""
+    mapping = jnp.asarray(mapping, jnp.int32)
+    return jnp.right_shift(mapping, 5), jnp.bitwise_and(mapping, 31)
+
+
+def evaluate_packed(packed: PackedBits, mapping: jax.Array,
+                    tables: jax.Array, *,
+                    interpret: bool | None = None) -> PackedBits:
+    """Hard LUT-layer inference on packed words via the Pallas kernel.
+
+    packed: PackedBits of C candidate bits; mapping (m, n) int32 into the
+    logical bit indices; tables (m, 2^n) {0,1}.  Pads B to a block
+    multiple and m to a 32-multiple with all-zero LUTs (their output bits
+    are 0, preserving the zero-pad invariant of the word format).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    words = packed.words
+    B = words.shape[0]
+    m, n = mapping.shape
+    bb = min(256, _round_up(B, 8))
+    Bp = _round_up(B, bb)
+    mp = _round_up(m, WORD_BITS)
+    widx, boff = packed_wire_indices(mapping)
+    widx = jnp.pad(widx, ((0, mp - m), (0, 0)))
+    boff = jnp.pad(boff, ((0, mp - m), (0, 0)))
+    tabs = jnp.pad(tables.astype(jnp.int32), ((0, mp - m), (0, 0)))
+    wordsp = jnp.pad(words, ((0, Bp - B), (0, 0)))
+    out = lut_eval_packed(wordsp, widx, boff, tabs, block_b=bb,
+                          interpret=interpret)
+    return PackedBits(out[:B], m)
+
+
+__all__ = ["evaluate", "evaluate_packed", "packed_wire_indices",
+           "lut_eval_ref", "lut_eval_packed_ref", "selection_onehot"]

@@ -23,6 +23,15 @@ def lut_eval_ref(bits: jax.Array, mapping: jax.Array,
     return out.astype(jnp.float32)
 
 
+def lut_eval_packed_ref(packed, mapping: jax.Array,
+                        tables: jax.Array):
+    """Packed oracle: unpack -> float oracle -> repack (PackedBits in/out)."""
+    from ...core.bitpack import PackedBits
+    bits = packed.unpack()
+    out = lut_eval_ref(bits, mapping, tables)
+    return PackedBits.pack(out)
+
+
 def selection_onehot(mapping: jax.Array, num_candidates: int) -> jax.Array:
     """(m, n) wire indices -> (C, m*n) one-hot selection matrix (the
     'learned sparse wiring recast as a dense systolic matmul')."""

@@ -16,6 +16,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.bitpack import masked_group_counts
+
+
+def _first_argmax(counts):
+    """First index achieving the max (ties -> lower class index),
+    max-then-first-index idiom; shared by all classifier kernels."""
+    best = jnp.max(counts, axis=-1, keepdims=True)
+    is_best = counts >= best
+    return jnp.argmax(is_best.astype(jnp.int32), axis=-1).astype(jnp.int32)
+
 
 def _popcount_kernel(bits_ref, counts_ref, idx_ref, *, num_classes: int):
     bits = bits_ref[...]                                 # (B_blk, m)
@@ -23,11 +33,7 @@ def _popcount_kernel(bits_ref, counts_ref, idx_ref, *, num_classes: int):
     g = m // num_classes
     counts = bits.reshape(B_blk, num_classes, g).sum(-1)  # f32
     counts_ref[...] = counts
-    best = jnp.max(counts, axis=-1, keepdims=True)
-    # first index achieving the max (ties -> lower class index)
-    is_best = counts >= best
-    idx = jnp.argmax(is_best.astype(jnp.int32), axis=-1)
-    idx_ref[...] = idx.astype(jnp.int32)[:, None]
+    idx_ref[...] = _first_argmax(counts)[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=("num_classes", "block_b",
@@ -54,4 +60,45 @@ def popcount_classify(bits: jax.Array, num_classes: int, *,
         ],
         interpret=interpret,
     )(bits)
+    return counts, idx[:, 0]
+
+
+def _popcount_packed_kernel(words_ref, mask_ref, counts_ref, idx_ref):
+    # words: (B_blk, W) uint32 packed layer-output bits; mask: (classes, W)
+    # uint32 class-group masks (word boundaries need not align with group
+    # boundaries).  SWAR popcount per masked word, summed over W — the GPC
+    # compressor tree on 32-bit lanes.
+    words = words_ref[...]
+    mask = mask_ref[...]
+    counts = masked_group_counts(words, mask)                # (B_blk, C)
+    counts_ref[...] = counts
+    idx_ref[...] = _first_argmax(counts)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def popcount_classify_packed(words: jax.Array, class_masks: jax.Array, *,
+                             block_b: int = 512, interpret: bool = False):
+    """words (B, W) uint32; class_masks (classes, W) uint32 ->
+    (counts (B, classes) f32, idx (B, 1) i32).  Ties -> lower class."""
+    B, W = words.shape
+    classes = class_masks.shape[0]
+    bb = min(block_b, B)
+    assert B % bb == 0, (B, bb)
+    counts, idx = pl.pallas_call(
+        _popcount_packed_kernel,
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, W), lambda i: (i, 0)),
+            pl.BlockSpec((classes, W), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, classes), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, classes), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(words, class_masks)
     return counts, idx[:, 0]

@@ -5,8 +5,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import popcount_classify
-from .ref import popcount_ref, classify_ref
+from ...core.bitpack import PackedBits, group_masks_np
+from .kernel import popcount_classify, popcount_classify_packed
+from .ref import popcount_ref, classify_ref, classify_packed_ref
 
 
 def _round_up(x: int, m: int) -> int:
@@ -27,4 +28,25 @@ def classify(bits: jax.Array, num_classes: int, *,
     return counts[:B], idx[:B]
 
 
-__all__ = ["classify", "popcount_ref", "classify_ref"]
+def classify_packed(packed: PackedBits, num_classes: int, *,
+                    interpret: bool | None = None):
+    """Packed classify: (PackedBits of m bits) -> (counts, argmax).
+
+    Pads B; the class masks absorb any group/word misalignment, and the
+    word format's zero pad bits guarantee padded lanes count nothing.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    words = packed.words
+    B = words.shape[0]
+    bb = min(512, _round_up(B, 8))
+    Bp = _round_up(B, bb)
+    wordsp = jnp.pad(words, ((0, Bp - B), (0, 0)))
+    masks = jnp.asarray(group_masks_np(packed.num_bits, num_classes))
+    counts, idx = popcount_classify_packed(wordsp, masks, block_b=bb,
+                                           interpret=interpret)
+    return counts[:B], idx[:B]
+
+
+__all__ = ["classify", "classify_packed", "popcount_ref", "classify_ref",
+           "classify_packed_ref"]

@@ -16,3 +16,8 @@ def classify_ref(bits: jax.Array, num_classes: int):
     """(B, m) -> (counts (B, classes), argmax (B,)); ties -> lower index."""
     counts = popcount_ref(bits, num_classes)
     return counts, jnp.argmax(counts, axis=-1).astype(jnp.int32)
+
+
+def classify_packed_ref(packed, num_classes: int):
+    """Packed oracle: unpack -> float oracle (PackedBits in)."""
+    return classify_ref(packed.unpack(), num_classes)

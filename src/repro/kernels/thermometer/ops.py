@@ -5,8 +5,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import thermometer_encode
-from .ref import thermometer_ref
+from ...core.bitpack import WORD_BITS, PackedBits
+from .kernel import thermometer_encode, thermometer_encode_packed
+from .ref import thermometer_ref, thermometer_packed_ref
 
 
 def _round_up(x: int, m: int) -> int:
@@ -39,4 +40,28 @@ def encode(x: jax.Array, thresholds: jax.Array, *,
     return bits.reshape(B, F * T) if flatten else bits
 
 
-__all__ = ["encode", "thermometer_ref"]
+def encode_packed(x: jax.Array, thresholds: jax.Array, *,
+                  interpret: bool | None = None) -> PackedBits:
+    """Thermometer-encode straight into packed uint32 words.
+
+    Pads B to a block multiple; the flat bit layout (bit f*T + t) is a
+    hard contract, so T is *not* padded — when F*T is not a 32-multiple
+    the kernel grid can't pack cleanly and we fall back to the jnp packed
+    oracle (same result, no Pallas).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, F = x.shape
+    T = thresholds.shape[1]
+    if (F * T) % WORD_BITS != 0:
+        return PackedBits(thermometer_packed_ref(x, thresholds), F * T)
+    bb = min(256, _round_up(B, 8))
+    Bp = _round_up(B, bb)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+    words = thermometer_encode_packed(xp, thresholds, block_b=bb,
+                                      interpret=interpret)
+    return PackedBits(words[:B], F * T)
+
+
+__all__ = ["encode", "encode_packed", "thermometer_ref",
+           "thermometer_packed_ref"]

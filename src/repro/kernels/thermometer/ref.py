@@ -12,3 +12,10 @@ def thermometer_ref(x: jax.Array, thresholds: jax.Array) -> jax.Array:
     bit[b, f, t] = x[b, f] > thresholds[f, t]  (matches core.thermometer).
     """
     return (x[:, :, None] > thresholds[None]).astype(jnp.float32)
+
+
+def thermometer_packed_ref(x: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """Packed oracle: (B, ceil(F*T/32)) uint32 words of the flat bits."""
+    from ...core.bitpack import pack_bits
+    bits = (x[:, :, None] > thresholds[None]).reshape(x.shape[0], -1)
+    return pack_bits(bits)

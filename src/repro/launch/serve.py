@@ -1,14 +1,22 @@
-"""Batched serving driver: prefill + decode loop on the host mesh.
+"""Batched serving driver: LM prefill+decode loop, or DWN classification.
 
-Runs a reduced (or full, on TPU) config: batches of prompts are
-prefilled once, then decoded token-by-token with the per-arch cache
-(KV / SSM state / LRU state).  Used by examples/serve_batch.py and the
-integration tests; the full-size serving cells are proven by the
-dry-run (prefill_32k / decode_32k / long_500k).
+LM archs: batches of prompts are prefilled once, then decoded
+token-by-token with the per-arch cache (KV / SSM state / LRU state).
+Used by examples/serve_batch.py and the integration tests; the full-size
+serving cells are proven by the dry-run (prefill_32k / decode_32k /
+long_500k).
+
+DWN archs (family="dwn", e.g. --arch dwn-jsc-lg): batches of JSC feature
+vectors are classified through the *fused packed* Pallas kernel — encode
+-> LUT layer(s) -> popcount in one pallas_call with bits packed 32/word
+in VMEM — and the loop reports throughput + latency percentiles.  The
+first batch is cross-checked bit-exactly against the float
+``apply_hard`` oracle before timing starts.
 
 Usage:
     python -m repro.launch.serve --arch mamba2-1.3b --reduced \
         --batch 4 --prompt-len 32 --gen 16
+    python -m repro.launch.serve --arch dwn-jsc-lg --reduced
 """
 
 from __future__ import annotations
@@ -41,19 +49,94 @@ def build(cfg, mesh, *, cache_len: int):
     return jprefill, jdecode, p_shard, tp
 
 
+def dwn_serve(cfg, args) -> int:
+    """DWN classification serving loop on the fused packed kernel."""
+    from ..core.model import DWNConfig, init_dwn, freeze, apply_hard
+    from ..core.classifier import predict
+    from ..data.jsc import load_jsc
+    from ..kernels.fused import ops as fused_ops
+
+    # --reduced shrinks the request volume, not the model: the datapath
+    # (T=200 encode, m LUTs) is the thing being served.
+    n_train = 2000 if args.reduced else 20000
+    requests = args.requests if args.requests else (8 if args.reduced else 64)
+    batch = args.batch if args.batch else (256 if args.reduced else 4096)
+
+    data = load_jsc(n_train, max(batch, 512))
+    dcfg = DWNConfig(lut_counts=(cfg.dwn_luts,),
+                     bits_per_feature=cfg.dwn_bits)
+    key = jax.random.PRNGKey(args.seed)
+    params, buffers = init_dwn(key, dcfg, data.x_train)
+    frozen = freeze(params, buffers, dcfg)
+    thresholds = jnp.asarray(frozen.thresholds)
+    mappings = [jnp.asarray(i) for i in frozen.mapping_idx]
+    tables = [jnp.asarray(t) for t in frozen.tables_bin]
+
+    def classify(xb):
+        return fused_ops.forward_packed(xb, thresholds, mappings, tables,
+                                        dcfg.num_classes)
+
+    jclassify = jax.jit(classify)
+
+    # Bit-exactness gate before timing: fused packed == float oracle.
+    x0 = jnp.asarray(data.x_test[:batch])
+    counts0, idx0 = jclassify(x0)
+    oracle = apply_hard(frozen, x0)
+    bit_exact = (np.array_equal(np.asarray(counts0), np.asarray(oracle))
+                 and np.array_equal(np.asarray(idx0),
+                                    np.asarray(predict(oracle))))
+    if not bit_exact:
+        raise RuntimeError(
+            "fused packed kernel diverged from the apply_hard oracle; "
+            "refusing to serve a broken datapath")
+
+    rng = np.random.default_rng(args.seed)
+    lat = []
+    served = 0
+    t_total0 = time.time()
+    for _ in range(requests):
+        sel = rng.integers(0, data.x_test.shape[0], batch)
+        xb = jnp.asarray(data.x_test[sel])
+        t0 = time.time()
+        counts, idx = jclassify(xb)
+        idx.block_until_ready()
+        lat.append(time.time() - t0)
+        served += batch
+    t_total = time.time() - t_total0
+
+    lat_ms = np.sort(np.asarray(lat)) * 1e3
+    print(json.dumps({
+        "arch": cfg.name, "mode": "dwn-classify", "datapath": "fused-packed",
+        "luts": cfg.dwn_luts, "bits_per_feature": cfg.dwn_bits,
+        "batch": batch, "requests": requests, "served": served,
+        "bit_exact_vs_oracle": bit_exact,
+        "throughput_samples_per_s": round(served / t_total, 1),
+        "latency_ms_p50": round(float(np.percentile(lat_ms, 50)), 3),
+        "latency_ms_p99": round(float(np.percentile(lat_ms, 99)), 3),
+        "sample": np.asarray(idx0[:8]).tolist(),
+    }))
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="request batch size (default: 4 for LM archs, "
+                         "256/4096 reduced/full for DWN archs)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="DWN mode: number of request batches to serve")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--greedy", action="store_true", default=True)
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
+    if cfg.family == "dwn":
+        return dwn_serve(cfg, args)
     if args.reduced:
         cfg = cfg.reduced()
     mesh = make_host_mesh(args.model_parallel)
@@ -66,7 +149,7 @@ def main(argv=None):
         params = jax.jit(lambda k: mod.init_params(k, cfg, tp),
                          out_shardings=p_shard)(key)
 
-    B = args.batch
+    B = args.batch or 4
     batch = {"tokens": jax.random.randint(
         key, (B, args.prompt_len), 0, cfg.vocab_size)}
     if cfg.family == "encdec":

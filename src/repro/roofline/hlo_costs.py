@@ -88,7 +88,6 @@ _TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
 _GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_OPERANDS_RE = re.compile(r"\(([^)]*)\)")   # linear-time: up to first ')'
 
 
 @dataclasses.dataclass
@@ -134,13 +133,11 @@ def _dot_flops(op: OpLine, shapes: dict) -> float:
     out = _shape_info(op.result)
     if out is None:
         return 0.0
-    m = _OPERANDS_RE.search(op.line[op.line.index(op.opcode) +
-                                    len(op.opcode):])
+    operands = _operand_names(op)
     k = 1
     cm = _CONTRACT_RE.search(op.line)
-    if m and cm:
-        lhs_name = m.group(1).split(",")[0].strip().lstrip("%")
-        lhs = shapes.get(lhs_name)
+    if operands and cm:
+        lhs = shapes.get(operands[0])
         if lhs:
             dims = [int(d) for d in cm.group(1).split(",") if d != ""]
             for d in dims:
@@ -159,12 +156,57 @@ def _group_size(line: str, default: int) -> int:
     return default
 
 
+def _operand_span(line: str, opcode: str) -> str | None:
+    """The text between the parentheses of ``opcode(...)``, bracket-aware.
+
+    Anchors on "opcode(" — the op *name* may itself contain the opcode as a
+    substring (e.g. "%dot.0 = ... dot(...)") — and scans to the *matching*
+    close paren (operand shapes may nest parens/brackets/braces).
+    """
+    start = line.find(opcode + "(")
+    if start < 0:
+        return None
+    i = start + len(opcode) + 1
+    depth, j = 1, i
+    while j < len(line) and depth:
+        ch = line[j]
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        j += 1
+    return line[i:j - 1]
+
+
+def _split_top_level(s: str) -> list[str]:
+    parts, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
 def _operand_names(op: OpLine) -> list[str]:
-    tail = op.line[op.line.index(op.opcode) + len(op.opcode):]
-    m = _OPERANDS_RE.search(tail)
-    if not m:
+    span = _operand_span(op.line, op.opcode)
+    if span is None:
         return []
-    return [nm.strip().lstrip("%") for nm in m.group(1).split(",")]
+    # Operands are typed: "f32[16,128]{1,0} %name" — keep only the name.
+    names = []
+    for tok in _split_top_level(span):
+        tok = tok.strip()
+        if not tok:
+            continue
+        names.append(tok.split()[-1].lstrip("%"))
+    return names
 
 
 def _named_bytes(nm: str, shapes: dict) -> int:

@@ -1,0 +1,114 @@
+"""Minimal deterministic stand-in for `hypothesis` (offline container).
+
+The repo's property tests declare `hypothesis` as a test dependency
+(pyproject.toml / requirements.txt), but this container cannot install
+packages.  conftest.py registers this shim under ``sys.modules["hypothesis"]``
+only when the real library is absent, so the same test code runs in both
+environments.
+
+Supported surface (what the test-suite uses):
+
+    from hypothesis import given, settings, strategies as st
+    st.floats(lo, hi)  st.integers(lo, hi)  st.sampled_from(seq)
+    st.booleans()      st.just(v)
+
+Semantics: ``@given`` re-runs the test ``max_examples`` times with values
+drawn from a PRNG seeded by the test's qualified name — deterministic across
+runs.  The first draws are the strategy's boundary values (min/max/every
+sampled element) so edge cases are always exercised; there is no shrinking.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    def __init__(self, corners, draw):
+        self._corners = list(corners)
+        self._draw = draw
+
+    def example(self, rng: random.Random, i: int):
+        if i < len(self._corners):
+            return self._corners[i]
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def floats(min_value=-1e9, max_value=1e9, **_):
+        return _Strategy([min_value, max_value],
+                         lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1, **_):
+        return _Strategy([min_value, max_value],
+                         lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(elements, lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True], lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def just(value):
+        return _Strategy([value], lambda rng: value)
+
+
+strategies = _Strategies()
+
+
+class _UnsatisfiedAssumption(Exception):
+    """Raised by assume(False); the current example is discarded."""
+
+
+def given(*strats, **kwstrats):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = getattr(wrapper, "_shim_settings", {})
+            n = conf.get("max_examples") or _DEFAULT_MAX_EXAMPLES
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                vals = [s.example(rng, i) for s in strats]
+                kwvals = {k: s.example(rng, i) for k, s in kwstrats.items()}
+                try:
+                    fn(*args, *vals, **kwargs, **kwvals)
+                except _UnsatisfiedAssumption:
+                    continue
+        # pytest resolves fixtures from inspect.signature, which follows
+        # __wrapped__; drop it so the injected parameters are not mistaken
+        # for fixtures.
+        del wrapper.__wrapped__
+        wrapper.is_hypothesis_test = True
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int | None = None, deadline=None, **_):
+    def decorate(fn):
+        fn._shim_settings = {"max_examples": max_examples}
+        return fn
+    return decorate
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+def assume(condition: bool) -> bool:
+    # Like real hypothesis: an unsatisfied assumption aborts the current
+    # example (the shim moves on to the next draw instead of re-drawing).
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
