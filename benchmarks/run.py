@@ -16,7 +16,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     from . import (table1_hardware, table2_literature, table3_quantization,
                    fig2_encoding, fig5_breakdown, fig6_pareto,
-                   roofline_report, kernels_bench)
+                   roofline_report, kernels_bench, serve_bench)
     benches = {
         "table1": table1_hardware.run,
         "table2": table2_literature.run,
@@ -26,6 +26,7 @@ def main(argv=None):
         "fig6": fig6_pareto.run,
         "roofline": roofline_report.run,
         "kernels": kernels_bench.run,
+        "serve": serve_bench.run,
     }
     only = [s for s in args.only.split(",") if s]
     failures = 0

@@ -1,0 +1,77 @@
+"""Serving benchmark: throughput + latency per backend per JSC preset.
+
+Serves an identical, seeded request stream through every registered DWN
+datapath backend on each serving preset (sm/md/lg) via the ServingEngine,
+and records throughput and p50/p99 total latency to ``BENCH_serve.json``
+at the repo root (one record per run, overwritten) — the serving-level
+companion of ``BENCH_kernels.json``.
+
+Per backend the engine first serves one warmup request so the
+per-(backend, bucket) compile is excluded from the timed stream, matching
+how a long-running server amortizes compiles.  Wall times on CPU are the
+interpret-mode emulation for the Pallas backend; the cross-backend
+*ordering* (packed vs float) is the TPU-relevant signal.
+"""
+
+import json
+import time
+
+from .common import csv_row, ROOT
+
+BENCH_JSON = ROOT / "BENCH_serve.json"
+
+PRESETS = ("dwn-jsc-sm", "dwn-jsc-md", "dwn-jsc-lg")
+REQUESTS = 4
+BATCH = 64
+
+
+def run():
+    import numpy as np
+    from repro.serving import ServingEngine, available_backends
+    from repro.serving.scheduler import latency_stats
+
+    record = {"stream": {"requests": REQUESTS, "batch": BATCH},
+              "presets": {}}
+    for preset in PRESETS:
+        engine = ServingEngine(preset, max_bucket=BATCH, min_bucket=8,
+                               n_train=2000, verify=True)
+        per_backend = {}
+        for backend in available_backends():
+            engine.use_backend(backend)
+            # compile the (backend, BATCH) bucket outside timing
+            engine.warmup(BATCH)
+            rng = np.random.default_rng(0)
+            t0 = time.perf_counter()
+            for _ in range(REQUESTS):
+                engine.submit(engine.make_request(
+                    BATCH, seed=int(rng.integers(2**31))))
+            done = engine.drain()
+            wall = time.perf_counter() - t0
+            served = sum(r.size for r in done)
+            # compute_ms = datapath latency per step; queue wait is an
+            # artifact of pre-submitting the whole stream
+            lat = latency_stats(done)["compute_ms"]
+            per_backend[backend] = {
+                "throughput_samples_per_s": round(served / wall, 1),
+                "latency_ms_p50": lat["p50"],
+                "latency_ms_p99": lat["p99"],
+            }
+            csv_row(f"serve/{preset}/{backend}",
+                    lat["p50"] * 1e3,
+                    f"thru={per_backend[backend]['throughput_samples_per_s']}"
+                    f";p99_ms={lat['p99']}")
+        record["presets"][preset] = {
+            "luts": engine.cfg.dwn_luts,
+            "bit_exact_vs_oracle": engine.bit_exact,
+            "backends": per_backend,
+        }
+
+    with open(BENCH_JSON, "w") as fh:
+        json.dump(record, fh, indent=2)
+    print(f"\nwritten {BENCH_JSON.name}: "
+          f"{len(PRESETS)} presets x {len(record['presets'][PRESETS[0]]['backends'])} "
+          f"backends, {REQUESTS}x{BATCH} samples each")
+
+
+if __name__ == "__main__":
+    run()

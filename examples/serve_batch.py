@@ -1,25 +1,42 @@
-"""Batched serving example (deliverable b): prefill + decode across three
-architecture families — KV-cache attention, O(1)-state SSM, and the
-hybrid RG-LRU — through the production serving driver.
+"""Batched serving example: four architecture families — KV-cache
+attention, O(1)-state SSM, the hybrid RG-LRU, and the paper's own DWN
+classifier — through one code path: the unified ServingEngine
+submit/drain API.
+
+LM archs serve one prompt batch (prefill + token-by-token decode); the
+DWN arch serves a ragged stream of JSC classification requests that the
+scheduler coalesces into power-of-two batch buckets.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py
 """
 
+import json
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.launch import serve as serve_mod
+from repro.serving import ServingEngine
+
+#: arch -> list of request sizes (LM: prompt batches; DWN: sample counts)
+STREAMS = {
+    "qwen3-8b": [4],
+    "mamba2-1.3b": [4],
+    "recurrentgemma-2b": [4],
+    "dwn-jsc-sm": [5, 17, 64, 3, 100],
+}
 
 
 def main():
-    rc = 0
-    for arch in ("qwen3-8b", "mamba2-1.3b", "recurrentgemma-2b"):
+    for arch, sizes in STREAMS.items():
         print(f"\n== serving {arch} (reduced) ==", flush=True)
-        rc |= serve_mod.main(["--arch", arch, "--reduced", "--batch", "4",
-                              "--prompt-len", "24", "--gen", "12"])
-    return rc
+        engine = ServingEngine(arch, reduced=True, prompt_len=24, gen=12,
+                               max_bucket=64)
+        for i, size in enumerate(sizes):
+            engine.submit(engine.make_request(size, seed=i))
+        engine.drain()
+        print(json.dumps(engine.report()), flush=True)
+    return 0
 
 
 if __name__ == "__main__":

@@ -33,10 +33,18 @@ for _m, _l in (("dwn-jsc-sm10", 10), ("dwn-jsc-sm50", 50),
 import dataclasses as _dc
 
 # Short serving aliases (launch/serve.py --arch dwn-jsc-{sm,md,lg}): the
-# packed fused serving datapath on the paper's size tiers.
+# paper's size tiers wired to a serving backend via ``dwn_datapath``
+# (resolved by repro.serving.engine against the backend registry; values
+# that aren't registered backends — "corner"/"gather" — keep selecting
+# the dryrun datapath variants below and serve on the default backend).
+# The plain alias serves on the fused packed Pallas kernel; the -xla
+# twin serves the same packed word format through plain XLA ops.
 for _m, _l in (("dwn-jsc-sm", 50), ("dwn-jsc-md", 360),
                ("dwn-jsc-lg", 2400)):
-    register(_dc.replace(_dwn(_m, _l, fused=True), name=_m))
+    register(_dc.replace(_dwn(_m, _l, fused=True), name=_m,
+                         dwn_datapath="fused-packed"))
+    register(_dc.replace(_dwn(_m, _l, fused=True), name=_m + "-xla",
+                         dwn_datapath="packed-xla"))
 
 _BASE = _dwn("dwn-jsc-lg2400-x", 2400)
 register(_dc.replace(_BASE, name="dwn-jsc-lg2400-opt1",

@@ -25,6 +25,7 @@ values flow through ``jax.jit`` unchanged.  NumPy twins (`pack_bits_np`,
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -166,6 +167,17 @@ def group_masks_np(num_bits: int, num_groups: int) -> np.ndarray:
     return masks
 
 
+@functools.lru_cache(maxsize=None)
+def group_masks(num_bits: int, num_groups: int) -> Array:
+    """Device-resident, memoized twin of :func:`group_masks_np`.
+
+    The masks depend only on (num_bits, num_groups) — per model, not per
+    batch — so the serving compile cache and every classifier trace share
+    one staged copy instead of rebuilding the numpy masks per call site.
+    """
+    return jnp.asarray(group_masks_np(num_bits, num_groups))
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class PackedBits:
@@ -206,5 +218,5 @@ __all__ = [
     "WORD_BITS", "words_for_bits", "pack_bits", "unpack_bits",
     "pack_bits_np", "unpack_bits_np", "popcount_u32", "popcount_u32_np",
     "select_packed_bits", "lut_addresses", "masked_group_counts",
-    "group_masks_np", "PackedBits",
+    "group_masks_np", "group_masks", "PackedBits",
 ]

@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .bitpack import PackedBits, group_masks_np, masked_group_counts
+from .bitpack import PackedBits, group_masks, masked_group_counts
 
 Array = jax.Array
 
@@ -33,8 +33,8 @@ def group_popcount_packed(packed: PackedBits, num_classes: int) -> Array:
     precomputed (classes, W) mask against the packed words and popcounts the
     result.  Returns float32 counts identical to the float path.
     """
-    masks = jnp.asarray(group_masks_np(packed.num_bits, num_classes))
-    return masked_group_counts(packed.words, masks)
+    return masked_group_counts(packed.words,
+                               group_masks(packed.num_bits, num_classes))
 
 
 def logits_from_counts(counts: Array, tau: float) -> Array:

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ...core.bitpack import WORD_BITS, group_masks_np
+from ...core.bitpack import WORD_BITS, group_masks
 from ..lut_eval.ref import selection_onehot
 from ..lut_eval.ops import packed_wire_indices
 from .kernel import fused_dwn, fused_dwn_packed
@@ -47,32 +47,31 @@ def forward(x: jax.Array, thresholds: jax.Array, mapping: jax.Array,
     return counts[:B]
 
 
-def forward_packed(x: jax.Array, thresholds: jax.Array, mappings, tables,
-                   num_classes: int, *, interpret: bool | None = None):
-    """Whole-accelerator packed DWN inference: features -> (counts, argmax).
+def make_forward_packed(thresholds: jax.Array, mappings, tables,
+                        num_classes: int, *,
+                        interpret: bool | None = None):
+    """Build ``fn(x) -> (counts, argmax)`` with operand prep done once.
 
-    The serving fast path: one fused pallas_call runs encode -> every LUT
-    layer -> group popcount with all bit tensors packed uint32 and
-    VMEM-resident.  ``mappings``/``tables`` are per-layer lists (single
-    arrays accepted for the paper's one-layer JSC models); layer widths are
-    padded to 32-multiples with all-zero LUTs, and the class masks are built
-    from the *logical* final width so padding never mis-counts.
+    Hoists everything batch-independent out of the per-call path: wire
+    indices, 32-multiple layer padding with all-zero LUTs, and the class
+    masks built from the *logical* final width so padding never
+    mis-counts.  The serving backends call this once per model and reuse
+    the closure across every batch bucket; ``forward_packed`` below stays
+    as the one-shot convenience wrapper.
 
     Requires F*T to be a 32-multiple (true for all JSC presets: 16*200);
     falls back to the jnp oracle otherwise.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     if not isinstance(mappings, (list, tuple)):
         mappings, tables = [mappings], [tables]
-    B, F = x.shape
-    T = thresholds.shape[1]
+    mappings, tables = list(mappings), list(tables)
+    F, T = thresholds.shape
     if (F * T) % WORD_BITS != 0:
-        return fused_dwn_packed_ref(x, thresholds, list(mappings),
-                                    list(tables), num_classes)
-    bb = min(256, _round_up(B, 8))
-    Bp = _round_up(B, bb)
-    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+        def fallback(x: jax.Array):
+            return fused_dwn_packed_ref(x, thresholds, mappings, tables,
+                                        num_classes)
+        return fallback
+
     layer_arrays = []
     for mp_arr, tb in zip(mappings, tables):
         m, n = mp_arr.shape
@@ -83,13 +82,37 @@ def forward_packed(x: jax.Array, thresholds: jax.Array, mappings, tables,
             jnp.pad(boff, ((0, mp - m), (0, 0))),
             jnp.pad(jnp.asarray(tb, jnp.int32), ((0, mp - m), (0, 0))),
         ]
+    layer_arrays = tuple(layer_arrays)
     m_last = mappings[-1].shape[0]
-    masks = jnp.asarray(group_masks_np(m_last, num_classes))
-    counts, idx = fused_dwn_packed(xp, thresholds, tuple(layer_arrays),
-                                   masks, num_layers=len(mappings),
-                                   block_b=bb, interpret=interpret)
-    return counts[:B], idx[:B]
+    masks = group_masks(m_last, num_classes)
+    num_layers = len(mappings)
+
+    def fn(x: jax.Array):
+        interp = interpret
+        if interp is None:
+            interp = jax.default_backend() != "tpu"
+        B = x.shape[0]
+        bb = min(256, _round_up(B, 8))
+        Bp = _round_up(B, bb)
+        xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+        counts, idx = fused_dwn_packed(xp, thresholds, layer_arrays,
+                                       masks, num_layers=num_layers,
+                                       block_b=bb, interpret=interp)
+        return counts[:B], idx[:B]
+    return fn
 
 
-__all__ = ["forward", "forward_packed", "fused_dwn_ref",
-           "fused_dwn_packed_ref"]
+def forward_packed(x: jax.Array, thresholds: jax.Array, mappings, tables,
+                   num_classes: int, *, interpret: bool | None = None):
+    """Whole-accelerator packed DWN inference: features -> (counts, argmax).
+
+    The serving fast path: one fused pallas_call runs encode -> every LUT
+    layer -> group popcount with all bit tensors packed uint32 and
+    VMEM-resident.  One-shot wrapper over :func:`make_forward_packed`.
+    """
+    return make_forward_packed(thresholds, mappings, tables, num_classes,
+                               interpret=interpret)(x)
+
+
+__all__ = ["forward", "forward_packed", "make_forward_packed",
+           "fused_dwn_ref", "fused_dwn_packed_ref"]

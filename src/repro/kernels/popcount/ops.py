@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ...core.bitpack import PackedBits, group_masks_np
+from ...core.bitpack import PackedBits, group_masks
 from .kernel import popcount_classify, popcount_classify_packed
 from .ref import popcount_ref, classify_ref, classify_packed_ref
 
@@ -42,7 +42,7 @@ def classify_packed(packed: PackedBits, num_classes: int, *,
     bb = min(512, _round_up(B, 8))
     Bp = _round_up(B, bb)
     wordsp = jnp.pad(words, ((0, Bp - B), (0, 0)))
-    masks = jnp.asarray(group_masks_np(packed.num_bits, num_classes))
+    masks = group_masks(packed.num_bits, num_classes)
     counts, idx = popcount_classify_packed(wordsp, masks, block_b=bb,
                                            interpret=interpret)
     return counts[:B], idx[:B]

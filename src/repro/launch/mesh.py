@@ -31,6 +31,17 @@ def make_host_mesh(model_parallel: int = 1):
     return jax.make_mesh((n // mp, mp), ("data", "model"))
 
 
+def make_data_mesh():
+    """1-D ("data",) mesh over every host device.
+
+    The DWN classify path is embarrassingly data-parallel (no weights to
+    shard: the whole frozen model fits any single device), so serving
+    shards only the batch axis; ``ServingEngine`` lays batch buckets over
+    this mesh with ``shard_map``.
+    """
+    return jax.make_mesh((len(jax.devices()),), ("data",))
+
+
 # TPU v5e hardware constants for the roofline (per chip).
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # bytes/s

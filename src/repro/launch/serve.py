@@ -1,22 +1,28 @@
-"""Batched serving driver: LM prefill+decode loop, or DWN classification.
+"""Serving CLI: a thin argparse front-end over ``repro.serving``.
+
+All serving logic lives in the subsystem — ``serving/backends.py``
+(pluggable DWN datapaths + compile cache + oracle cross-check),
+``serving/scheduler.py`` (admission-order microbatching into power-of-two
+batch buckets), ``serving/engine.py`` (unified submit/drain engine, DWN
+buckets sharded data-parallel over the host mesh).  This module only
+parses flags, synthesizes a request stream, and prints the JSON report.
 
 LM archs: batches of prompts are prefilled once, then decoded
 token-by-token with the per-arch cache (KV / SSM state / LRU state).
-Used by examples/serve_batch.py and the integration tests; the full-size
-serving cells are proven by the dry-run (prefill_32k / decode_32k /
-long_500k).
 
 DWN archs (family="dwn", e.g. --arch dwn-jsc-lg): batches of JSC feature
-vectors are classified through the *fused packed* Pallas kernel — encode
--> LUT layer(s) -> popcount in one pallas_call with bits packed 32/word
-in VMEM — and the loop reports throughput + latency percentiles.  The
-first batch is cross-checked bit-exactly against the float
-``apply_hard`` oracle before timing starts.
+vectors are classified through the selected datapath backend
+(--backend fused-packed | packed-xla | float-oracle); every non-oracle
+backend is checked bit-exactly against the ``apply_hard`` oracle before
+timing starts.  --ragged draws mixed request sizes in [1, batch] so the
+scheduler's coalescing/padding is exercised.
 
 Usage:
     python -m repro.launch.serve --arch mamba2-1.3b --reduced \
         --batch 4 --prompt-len 32 --gen 16
     python -m repro.launch.serve --arch dwn-jsc-lg --reduced
+    python -m repro.launch.serve --arch dwn-jsc-sm --reduced --ragged \
+        --backend packed-xla
 """
 
 from __future__ import annotations
@@ -24,97 +30,66 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_arch
-from ..models import api
-from ..sharding.partition import Partitioner
-from .mesh import make_host_mesh
-
-
-def build(cfg, mesh, *, cache_len: int):
-    tp = mesh.shape["model"]
-    part = Partitioner(mesh)
-    aparams = api.abstract_params(cfg, tp)
-    p_shard = part.tree_shardings(aparams, api.param_axes(cfg))
-    prefill = api.make_prefill(cfg, tp, cache_len=cache_len)
-    decode = api.make_decode_step(cfg, tp)
-    jprefill = jax.jit(prefill, in_shardings=(p_shard, None))
-    jdecode = jax.jit(decode, in_shardings=(p_shard, None, None),
-                      donate_argnums=(1,))
-    return jprefill, jdecode, p_shard, tp
+from ..serving import ServingEngine, available_backends
+from ..serving.scheduler import next_pow2
 
 
 def dwn_serve(cfg, args) -> int:
-    """DWN classification serving loop on the fused packed kernel."""
-    from ..core.model import DWNConfig, init_dwn, freeze, apply_hard
-    from ..core.classifier import predict
-    from ..data.jsc import load_jsc
-    from ..kernels.fused import ops as fused_ops
-
+    """DWN classification serving through the engine + scheduler."""
     # --reduced shrinks the request volume, not the model: the datapath
     # (T=200 encode, m LUTs) is the thing being served.
     n_train = 2000 if args.reduced else 20000
     requests = args.requests if args.requests else (8 if args.reduced else 64)
     batch = args.batch if args.batch else (256 if args.reduced else 4096)
+    max_bucket = next_pow2(batch)
 
-    data = load_jsc(n_train, max(batch, 512))
-    dcfg = DWNConfig(lut_counts=(cfg.dwn_luts,),
-                     bits_per_feature=cfg.dwn_bits)
-    key = jax.random.PRNGKey(args.seed)
-    params, buffers = init_dwn(key, dcfg, data.x_train)
-    frozen = freeze(params, buffers, dcfg)
-    thresholds = jnp.asarray(frozen.thresholds)
-    mappings = [jnp.asarray(i) for i in frozen.mapping_idx]
-    tables = [jnp.asarray(t) for t in frozen.tables_bin]
-
-    def classify(xb):
-        return fused_ops.forward_packed(xb, thresholds, mappings, tables,
-                                        dcfg.num_classes)
-
-    jclassify = jax.jit(classify)
-
-    # Bit-exactness gate before timing: fused packed == float oracle.
-    x0 = jnp.asarray(data.x_test[:batch])
-    counts0, idx0 = jclassify(x0)
-    oracle = apply_hard(frozen, x0)
-    bit_exact = (np.array_equal(np.asarray(counts0), np.asarray(oracle))
-                 and np.array_equal(np.asarray(idx0),
-                                    np.asarray(predict(oracle))))
-    if not bit_exact:
-        raise RuntimeError(
-            "fused packed kernel diverged from the apply_hard oracle; "
-            "refusing to serve a broken datapath")
+    engine = ServingEngine(
+        cfg, backend=args.backend or None, max_bucket=max_bucket,
+        min_bucket=min(8, max_bucket), n_train=n_train, seed=args.seed,
+        data_parallel=not args.no_data_parallel)
+    # compile the serve bucket before timing starts (ragged streams may
+    # still compile smaller ladder buckets in-band, one per bucket)
+    engine.warmup(batch)
 
     rng = np.random.default_rng(args.seed)
-    lat = []
-    served = 0
-    t_total0 = time.time()
     for _ in range(requests):
-        sel = rng.integers(0, data.x_test.shape[0], batch)
-        xb = jnp.asarray(data.x_test[sel])
-        t0 = time.time()
-        counts, idx = jclassify(xb)
-        idx.block_until_ready()
-        lat.append(time.time() - t0)
-        served += batch
-    t_total = time.time() - t_total0
+        size = int(rng.integers(1, batch + 1)) if args.ragged else batch
+        engine.submit(engine.make_request(size, seed=int(rng.integers(2**31))))
+    done = engine.drain()
 
-    lat_ms = np.sort(np.asarray(lat)) * 1e3
-    print(json.dumps({
-        "arch": cfg.name, "mode": "dwn-classify", "datapath": "fused-packed",
-        "luts": cfg.dwn_luts, "bits_per_feature": cfg.dwn_bits,
-        "batch": batch, "requests": requests, "served": served,
-        "bit_exact_vs_oracle": bit_exact,
-        "throughput_samples_per_s": round(served / t_total, 1),
-        "latency_ms_p50": round(float(np.percentile(lat_ms, 50)), 3),
-        "latency_ms_p99": round(float(np.percentile(lat_ms, 99)), 3),
-        "sample": np.asarray(idx0[:8]).tolist(),
-    }))
+    rep = engine.report()
+    rep["batch"] = batch
+    rep["ragged"] = bool(args.ragged)
+    # headline keys keep their pre-refactor meaning: *datapath* (compute)
+    # latency per microbatch step.  Queue wait — which grows with the
+    # pre-submitted stream length — stays separate under "latency".
+    lat = rep.get("latency", {}).get("compute_ms", {})
+    rep["latency_ms_p50"] = lat.get("p50")
+    rep["latency_ms_p99"] = lat.get("p99")
+    rep["sample"] = np.asarray(done[0].result[1][:8]).tolist()
+    print(json.dumps(rep))
+    return 0
+
+
+def lm_serve(cfg, args) -> int:
+    """LM prefill + decode serving through the engine."""
+    engine = ServingEngine(
+        cfg, reduced=args.reduced, prompt_len=args.prompt_len, gen=args.gen,
+        model_parallel=args.model_parallel, seed=args.seed)
+    B = args.batch or 4
+    engine.submit(engine.make_request(B, seed=args.seed))
+    done = engine.drain()
+
+    rep = engine.report()
+    tokens = done[0].result["tokens"]
+    assert tokens.shape == (B, args.gen)
+    rep["batch"] = B
+    rep["sample"] = tokens[0, :8].tolist()
+    print(json.dumps(rep))
     return 0
 
 
@@ -128,7 +103,16 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--requests", type=int, default=0,
-                    help="DWN mode: number of request batches to serve")
+                    help="DWN mode: number of requests to serve")
+    ap.add_argument("--ragged", action="store_true",
+                    help="DWN mode: draw request sizes uniformly in "
+                         "[1, batch] instead of a fixed batch")
+    ap.add_argument("--backend", default="",
+                    choices=[""] + available_backends(),
+                    help="DWN datapath backend (default: the arch's "
+                         "dwn_datapath, else fused-packed)")
+    ap.add_argument("--no-data-parallel", action="store_true",
+                    help="DWN mode: disable shard_map data parallelism")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--greedy", action="store_true", default=True)
@@ -137,54 +121,7 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if cfg.family == "dwn":
         return dwn_serve(cfg, args)
-    if args.reduced:
-        cfg = cfg.reduced()
-    mesh = make_host_mesh(args.model_parallel)
-    cache_len = args.prompt_len + args.gen
-    jprefill, jdecode, p_shard, tp = build(cfg, mesh, cache_len=cache_len)
-
-    key = jax.random.PRNGKey(args.seed)
-    mod = api.module_for(cfg)
-    with mesh:
-        params = jax.jit(lambda k: mod.init_params(k, cfg, tp),
-                         out_shardings=p_shard)(key)
-
-    B = args.batch or 4
-    batch = {"tokens": jax.random.randint(
-        key, (B, args.prompt_len), 0, cfg.vocab_size)}
-    if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(
-            key, (B, cfg.enc_frames, cfg.d_model), jnp.bfloat16) * 0.1
-    if cfg.family == "vlm":
-        batch["patches"] = jax.random.normal(
-            key, (B, cfg.num_patches, cfg.d_model), jnp.bfloat16) * 0.02
-
-    t0 = time.time()
-    with mesh:
-        logits, cache = jprefill(params, batch)
-    t_prefill = time.time() - t0
-
-    generated = []
-    nxt = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
-    t0 = time.time()
-    for _ in range(args.gen):
-        generated.append(np.asarray(nxt))
-        with mesh:
-            logits, cache = jdecode(params, cache, {"tokens": nxt})
-        nxt = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)
-    t_decode = time.time() - t0
-
-    out = np.concatenate(generated, 1)
-    assert out.shape == (B, args.gen)
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
-    print(json.dumps({
-        "arch": cfg.name, "batch": B, "prompt_len": args.prompt_len,
-        "generated": args.gen,
-        "prefill_s": round(t_prefill, 3),
-        "decode_s_per_tok": round(t_decode / args.gen, 4),
-        "sample": out[0, :8].tolist(),
-    }))
-    return 0
+    return lm_serve(cfg, args)
 
 
 if __name__ == "__main__":

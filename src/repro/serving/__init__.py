@@ -1,0 +1,28 @@
+"""Serving subsystem: pluggable DWN datapath backends, a microbatching
+request scheduler, and the engine that unifies DWN classification with LM
+prefill/decode serving behind one submit/drain API.
+
+Layering (each importable on its own):
+
+    backends.py   datapath registry + per-(arch, bucket) compile cache
+                  + startup bit-exactness cross-check vs the oracle
+    scheduler.py  admission-order request queue, power-of-two batch
+                  buckets, per-request queue/compute latency accounting
+    engine.py     ServingEngine: submit/drain over either family, DWN
+                  batches sharded data-parallel across the host mesh
+
+``repro.launch.serve`` is a thin CLI over :class:`ServingEngine`.
+"""
+
+from .backends import (Backend, BoundBackend, available_backends,
+                       get_backend, register_backend, build_dwn_model,
+                       verify_backends)
+from .scheduler import MicrobatchScheduler, Request, power_of_two_buckets
+from .engine import ServingEngine
+
+__all__ = [
+    "Backend", "BoundBackend", "available_backends", "get_backend",
+    "register_backend", "build_dwn_model", "verify_backends",
+    "MicrobatchScheduler", "Request", "power_of_two_buckets",
+    "ServingEngine",
+]

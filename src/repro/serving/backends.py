@@ -1,0 +1,265 @@
+"""Pluggable DWN datapath backends.
+
+A *backend* is one implementation of the serving datapath
+``features -> (class counts, argmax)`` over a frozen DWN.  All backends
+share the same hardware semantics (paper §IV); they differ in how the
+bits move:
+
+    fused-packed   one Pallas ``pallas_call``: encode -> LUT layer(s) ->
+                   masked popcount with every bit packed uint32 and
+                   VMEM-resident (the serving fast path from PR 1)
+    packed-xla     the same packed uint32 word format, but expressed as
+                   plain XLA ops via ``core.bitpack`` /
+                   ``apply_hard_packed`` — no ``pallas_call``, so it runs
+                   anywhere XLA does and is the data-parallel reference
+    float-oracle   ``apply_hard``: every bit a float32.  Slow, but the
+                   bit-exactness oracle every other backend is checked
+                   against at engine startup.
+
+``BoundBackend`` binds a backend to one model and owns the
+per-(arch, batch-bucket) compile cache: each bucket size gets exactly one
+``jax.jit`` entry, and the number of XLA traces actually taken is counted
+so the scheduler's no-recompile guarantee is testable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core.classifier import predict
+from ..core.model import DWNConfig, FrozenDWN, apply_hard, apply_hard_packed, \
+    freeze, init_dwn
+from ..kernels.fused import ops as fused_ops
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# model bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DWNModelBundle:
+    """A frozen DWN plus its device-resident operand arrays.
+
+    Built once per served arch; every backend reads from the same bundle so
+    cross-backend comparisons are comparisons of *datapaths*, not weights.
+    """
+
+    cfg: ArchConfig
+    dcfg: DWNConfig
+    frozen: FrozenDWN
+    thresholds: Array                 # (F, T)
+    mappings: list                    # per layer (m, n) int32
+    tables: list                      # per layer (m, 2^n) int32
+
+    @property
+    def num_classes(self) -> int:
+        return self.dcfg.num_classes
+
+    @property
+    def arch_name(self) -> str:
+        return self.cfg.name
+
+
+def build_dwn_model(cfg: ArchConfig, x_train: np.ndarray,
+                    seed: int = 0) -> DWNModelBundle:
+    """Init + freeze the arch's DWN and stage its operands on device."""
+    dcfg = DWNConfig(lut_counts=(cfg.dwn_luts,),
+                     bits_per_feature=cfg.dwn_bits)
+    params, buffers = init_dwn(jax.random.PRNGKey(seed), dcfg, x_train)
+    frozen = freeze(params, buffers, dcfg)
+    return DWNModelBundle(
+        cfg=cfg, dcfg=dcfg, frozen=frozen,
+        thresholds=jnp.asarray(frozen.thresholds),
+        mappings=[jnp.asarray(i) for i in frozen.mapping_idx],
+        tables=[jnp.asarray(t) for t in frozen.tables_bin])
+
+
+# ---------------------------------------------------------------------------
+# backend protocol + registry
+# ---------------------------------------------------------------------------
+
+class Backend:
+    """One DWN serving datapath.  Subclass + :func:`register_backend`.
+
+    ``make_step(model)`` returns ``fn(x) -> (counts, pred)`` for a feature
+    batch ``x (B, F)``; the callable must be pure and jit-able (it is
+    wrapped in ``jax.jit`` — and, data-parallel, in ``shard_map`` — by
+    :class:`BoundBackend`).
+    """
+
+    name: str = "?"
+    is_oracle: bool = False
+
+    def make_step(self, model: DWNModelBundle) -> Callable:
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(cls):
+    """Class decorator: register a Backend subclass under ``cls.name``."""
+    assert cls.name not in _REGISTRY, cls.name
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def get_backend(name: str) -> Backend:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown serving backend {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+@register_backend
+class FusedPackedBackend(Backend):
+    """Fused Pallas kernel, bits packed uint32 end-to-end in VMEM."""
+
+    name = "fused-packed"
+
+    def make_step(self, model: DWNModelBundle) -> Callable:
+        fwd = fused_ops.make_forward_packed(
+            model.thresholds, model.mappings, model.tables,
+            model.num_classes)
+
+        def fn(x: Array):
+            counts, pred = fwd(x)
+            return counts.astype(jnp.float32), pred
+        return fn
+
+
+@register_backend
+class PackedXLABackend(Backend):
+    """Packed uint32 words through plain XLA ops (no pallas_call)."""
+
+    name = "packed-xla"
+
+    def make_step(self, model: DWNModelBundle) -> Callable:
+        frozen = model.frozen
+
+        def fn(x: Array):
+            counts = apply_hard_packed(frozen, x)
+            return counts, predict(counts)
+        return fn
+
+
+@register_backend
+class FloatOracleBackend(Backend):
+    """``apply_hard``: the float bit-exactness oracle."""
+
+    name = "float-oracle"
+    is_oracle = True
+
+    def make_step(self, model: DWNModelBundle) -> Callable:
+        frozen = model.frozen
+
+        def fn(x: Array):
+            counts = apply_hard(frozen, x)
+            return counts, predict(counts)
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# bound backend: per-(arch, bucket) compile cache
+# ---------------------------------------------------------------------------
+
+class BoundBackend:
+    """A backend bound to one model, with a per-bucket compile cache.
+
+    ``step_for(bucket)`` returns the jitted step for that batch-bucket,
+    compiling at most once per bucket; ``wrap(fn, bucket)`` (optional,
+    supplied by the engine) may interpose ``shard_map`` for data-parallel
+    buckets.  ``compiles`` maps bucket -> number of XLA traces taken, the
+    observable the scheduler tests pin down.
+    """
+
+    def __init__(self, backend: Backend, model: DWNModelBundle, *,
+                 wrap: Callable | None = None):
+        self.backend = backend
+        self.model = model
+        self._fn = backend.make_step(model)
+        self._wrap = wrap
+        self._jitted: dict[int, Callable] = {}
+        self.compiles: dict[int, int] = {}
+
+    @property
+    def name(self) -> str:
+        return self.backend.name
+
+    @property
+    def is_oracle(self) -> bool:
+        return self.backend.is_oracle
+
+    def step_for(self, bucket: int) -> Callable:
+        if bucket not in self._jitted:
+            self.compiles[bucket] = 0
+            inner = self._fn
+
+            def traced(x, _bucket=bucket):
+                # the python body runs once per XLA trace: count them
+                self.compiles[_bucket] += 1
+                return inner(x)
+
+            fn = traced
+            if self._wrap is not None:
+                fn = self._wrap(fn, bucket)
+            self._jitted[bucket] = jax.jit(fn)
+        return self._jitted[bucket]
+
+    def __call__(self, x: Array):
+        return self.step_for(x.shape[0])(x)
+
+
+# ---------------------------------------------------------------------------
+# startup cross-check
+# ---------------------------------------------------------------------------
+
+def verify_backends(model: DWNModelBundle,
+                    backends: Sequence[BoundBackend],
+                    x_probe: np.ndarray) -> dict[str, bool]:
+    """Bit-exactness gate: every non-oracle backend vs the float oracle.
+
+    Runs each backend on the same probe batch (through its bucket cache,
+    so the compile is reused by serving) and compares counts *and*
+    predictions exactly.  Raises ``RuntimeError`` on any divergence —
+    refusing to serve a broken datapath — and returns {name: True} for
+    the checked backends otherwise.
+    """
+    x = jnp.asarray(x_probe)
+    oracle = get_backend("float-oracle")
+    oracle_bound = next((b for b in backends if b.is_oracle),
+                        BoundBackend(oracle, model))
+    counts_ref, pred_ref = jax.device_get(oracle_bound(x))
+    results: dict[str, bool] = {}
+    for b in backends:
+        if b.is_oracle:
+            continue
+        counts, pred = jax.device_get(b(x))
+        ok = (np.array_equal(np.asarray(counts, np.float32),
+                             np.asarray(counts_ref, np.float32))
+              and np.array_equal(pred, pred_ref))
+        results[b.name] = bool(ok)
+        if not ok:
+            raise RuntimeError(
+                f"serving backend {b.name!r} diverged from the apply_hard "
+                f"oracle on arch {model.arch_name!r}; refusing to serve a "
+                f"broken datapath")
+    return results
+
+
+__all__ = [
+    "Backend", "BoundBackend", "DWNModelBundle", "available_backends",
+    "build_dwn_model", "get_backend", "register_backend", "verify_backends",
+]

@@ -1,0 +1,310 @@
+"""ServingEngine: one submit/drain API over both served families.
+
+DWN archs (``family == "dwn"``) serve batched JSC classification through a
+pluggable datapath backend (``serving.backends``), microbatched into
+power-of-two buckets (``serving.scheduler``), and sharded data-parallel
+across the host mesh with ``shard_map`` when a bucket divides the device
+count.  Every non-oracle backend is cross-checked bit-exactly against the
+``apply_hard`` float oracle at startup — the engine refuses to construct a
+broken datapath.
+
+LM archs serve the existing prefill + token-by-token decode loop (KV /
+SSM / LRU caches) one request per step, through the same queue and the
+same per-request queue/compute latency accounting.
+
+Usage:
+    engine = ServingEngine("dwn-jsc-sm", max_bucket=256)
+    for xb in request_stream:
+        engine.submit(xb)
+    results = engine.drain()
+    print(engine.report())
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+
+from ..configs import get_arch
+from ..configs.base import ArchConfig
+from ..models import api
+from ..sharding.partition import Partitioner
+from ..launch.mesh import make_data_mesh, make_host_mesh
+from .backends import (BoundBackend, DWNModelBundle, available_backends,
+                       build_dwn_model, get_backend, verify_backends)
+from .scheduler import MicrobatchScheduler, Request, latency_stats
+
+
+class ServingEngine:
+    """Unified serving engine; family dispatch happens at construction.
+
+    Args:
+      arch: arch name or ``ArchConfig``; ``family`` selects the path.
+      backend: DWN datapath backend name.  ``None`` resolves from the
+        arch's ``dwn_datapath`` field when that names a registered
+        backend, else ``"fused-packed"``.
+      max_bucket / min_bucket: the power-of-two batch-bucket ladder.
+      data_parallel: shard DWN buckets over the ("data",) host mesh with
+        ``shard_map`` (buckets not divisible by the device count fall back
+        to single-device execution for that bucket).
+      verify: run the startup bit-exactness cross-check of every
+        registered non-oracle backend against the float oracle.
+      reduced: LM archs: serve the tiny same-family variant.  DWN archs:
+        kept for CLI symmetry (the model is never shrunk — the datapath
+        is the thing being served; callers shrink the request volume).
+      n_train: JSC training rows used to fit thermometer thresholds.
+      prompt_len / gen / model_parallel: LM serving shape knobs.
+    """
+
+    def __init__(self, arch: str | ArchConfig, *,
+                 backend: str | None = None,
+                 max_bucket: int = 256, min_bucket: int = 8,
+                 data_parallel: bool = True, verify: bool = True,
+                 reduced: bool = False, n_train: int = 2000,
+                 seed: int = 0, prompt_len: int = 32, gen: int = 16,
+                 model_parallel: int = 1):
+        cfg = get_arch(arch) if isinstance(arch, str) else arch
+        self.cfg = cfg
+        self.seed = seed
+        self.family = "dwn" if cfg.family == "dwn" else "lm"
+        self.scheduler = MicrobatchScheduler(
+            max_bucket=max_bucket, min_bucket=min(min_bucket, max_bucket))
+        self.bit_exact: dict[str, bool] = {}
+        self._drain_wall = 0.0
+        self._lm_stats: list[tuple[float, float]] = []
+        if self.family == "dwn":
+            self._init_dwn(cfg, backend, n_train, data_parallel, verify)
+        else:
+            if reduced:
+                self.cfg = cfg = cfg.reduced()
+            self._init_lm(cfg, prompt_len, gen, model_parallel)
+
+    # ------------------------------------------------------------------
+    # DWN classification path
+    # ------------------------------------------------------------------
+
+    def _init_dwn(self, cfg: ArchConfig, backend: str | None,
+                  n_train: int, data_parallel: bool, verify: bool):
+        from ..data.jsc import load_jsc
+        self.data = load_jsc(n_train, max(self.scheduler.max_bucket, 512),
+                             seed=self.seed)
+        self.model: DWNModelBundle = build_dwn_model(cfg, self.data.x_train,
+                                                     self.seed)
+        self.mesh = make_data_mesh()
+        self.n_data = self.mesh.shape["data"]
+        self._part = Partitioner(self.mesh)
+        self.data_parallel = bool(data_parallel) and self.n_data > 1
+        wrap = self._shard_wrap if self.data_parallel else None
+        self.backends = {name: BoundBackend(get_backend(name), self.model,
+                                            wrap=wrap)
+                         for name in available_backends()}
+        if backend is None:
+            backend = (cfg.dwn_datapath
+                       if cfg.dwn_datapath in self.backends
+                       else "fused-packed")
+        self.backend = self.backends[backend]
+        if verify:
+            # probe at the largest bucket: the multi-block grid path that
+            # serving actually uses is the one cross-checked, and the
+            # probe's compile is the one the serve loop reuses
+            probe = self.data.x_test[:self.scheduler.max_bucket]
+            self.bit_exact = verify_backends(
+                self.model, list(self.backends.values()), probe)
+
+    def _shard_wrap(self, fn, bucket: int):
+        """shard_map a backend step over the ("data",) mesh for one bucket.
+
+        Buckets that don't divide the device count run unsharded (the
+        ladder is powers of two, so with a power-of-two device count only
+        buckets below the device count fall back).
+        """
+        if bucket % self.n_data != 0:
+            return fn
+        spec_x = self._part.spec(("dwn_batch", None), name="dwn.serve.x")
+        spec_counts = self._part.spec(("dwn_batch", None),
+                                      name="dwn.serve.counts")
+        spec_pred = self._part.spec(("dwn_batch",), name="dwn.serve.pred")
+        return shard_map(fn, mesh=self.mesh, in_specs=(spec_x,),
+                         out_specs=(spec_counts, spec_pred),
+                         check_rep=False)
+
+    def use_backend(self, name: str) -> None:
+        """Switch the active DWN datapath (compile caches are kept)."""
+        assert self.family == "dwn"
+        self.backend = self.backends[name]
+
+    def warmup(self, size: int | None = None) -> None:
+        """Compile + execute the active backend's bucket outside timing.
+
+        Warms the bucket that ``size``-sample requests land in (default:
+        the largest bucket) without touching the request queue or the
+        latency accounting, so a serve loop's first timed request measures
+        steady-state serving rather than the one-time XLA trace.  Ragged
+        streams may still hit other ladder buckets inside timing — bounded
+        by one compile per bucket.
+        """
+        assert self.family == "dwn"
+        if size is None:
+            bucket = self.scheduler.max_bucket
+        else:
+            bucket = self.scheduler.bucket_for(
+                min(size, self.scheduler.max_bucket))
+        self._dwn_step(np.asarray(self.data.x_test[:bucket]))
+
+    def _dwn_step(self, x: np.ndarray):
+        fn = self.backend.step_for(x.shape[0])
+        counts, pred = fn(jnp.asarray(x))
+        pred.block_until_ready()             # compute timing is this call
+        return np.asarray(counts), np.asarray(pred)
+
+    # ------------------------------------------------------------------
+    # LM prefill/decode path
+    # ------------------------------------------------------------------
+
+    def _init_lm(self, cfg: ArchConfig, prompt_len: int, gen: int,
+                 model_parallel: int):
+        self.prompt_len, self.gen = prompt_len, gen
+        self.mesh = make_host_mesh(model_parallel)
+        tp = self.mesh.shape["model"]
+        part = Partitioner(self.mesh)
+        aparams = api.abstract_params(cfg, tp)
+        p_shard = part.tree_shardings(aparams, api.param_axes(cfg))
+        prefill = api.make_prefill(cfg, tp, cache_len=prompt_len + gen)
+        decode = api.make_decode_step(cfg, tp)
+        self._jprefill = jax.jit(prefill, in_shardings=(p_shard, None))
+        self._jdecode = jax.jit(decode, in_shardings=(p_shard, None, None),
+                                donate_argnums=(1,))
+        self.tp = tp
+        mod = api.module_for(cfg)
+        key = jax.random.PRNGKey(self.seed)
+        with self.mesh:
+            self.params = jax.jit(lambda k: mod.init_params(k, cfg, tp),
+                                  out_shardings=p_shard)(key)
+
+    def _lm_step(self, batch: dict) -> dict:
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        with self.mesh:
+            logits, cache = self._jprefill(self.params, batch)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+        generated = []
+        nxt = jnp.argmax(logits[:, :cfg.vocab_size],
+                         -1)[:, None].astype(jnp.int32)
+        t0 = time.perf_counter()
+        for _ in range(self.gen):
+            generated.append(np.asarray(nxt))
+            with self.mesh:
+                logits, cache = self._jdecode(self.params, cache,
+                                              {"tokens": nxt})
+            nxt = jnp.argmax(logits[:, :cfg.vocab_size],
+                             -1)[:, None].astype(jnp.int32)
+        t_decode = time.perf_counter() - t0
+        tokens = np.concatenate(generated, 1)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        return {"tokens": tokens, "prefill_s": t_prefill,
+                "decode_s_per_tok": t_decode / max(self.gen, 1)}
+
+    # ------------------------------------------------------------------
+    # unified submit / drain API
+    # ------------------------------------------------------------------
+
+    def make_request(self, size: int, seed: int = 0) -> Any:
+        """Synthesize one request payload of ``size`` samples/sequences."""
+        rng = np.random.default_rng(seed)
+        if self.family == "dwn":
+            sel = rng.integers(0, self.data.x_test.shape[0], size)
+            return self.data.x_test[sel]
+        key = jax.random.PRNGKey(seed)
+        batch = {"tokens": np.asarray(jax.random.randint(
+            key, (size, self.prompt_len), 0, self.cfg.vocab_size))}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                key, (size, self.cfg.enc_frames, self.cfg.d_model),
+                jnp.bfloat16) * 0.1
+        if self.cfg.family == "vlm":
+            batch["patches"] = jax.random.normal(
+                key, (size, self.cfg.num_patches, self.cfg.d_model),
+                jnp.bfloat16) * 0.02
+        return batch
+
+    def submit(self, payload: Any) -> Request:
+        """Enqueue one request (admission order is service order)."""
+        if self.family == "dwn":
+            payload = np.asarray(payload)
+            return self.scheduler.submit(payload, payload.shape[0])
+        size = int(np.asarray(payload["tokens"]).shape[0])
+        return self.scheduler.submit(payload, size)
+
+    def drain(self) -> list[Request]:
+        """Serve every queued request; blocks until all results ready."""
+        t0 = time.perf_counter()
+        if self.family == "dwn":
+            done = self.scheduler.drain_batched(self._dwn_step)
+        else:
+            done = self.scheduler.drain_serial(self._lm_step)
+            self._lm_stats.extend((r.result["prefill_s"],
+                                   r.result["decode_s_per_tok"])
+                                  for r in done)
+        self._drain_wall += time.perf_counter() - t0
+        return done
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+
+    def compile_counts(self) -> dict[str, dict[int, int]]:
+        """Per-backend {bucket: XLA traces} (DWN; empty for LM)."""
+        if self.family != "dwn":
+            return {}
+        return {name: dict(b.compiles)
+                for name, b in self.backends.items() if b.compiles}
+
+    def report(self) -> dict:
+        """JSON-able serving report over everything drained so far."""
+        reqs: Sequence[Request] = self.scheduler.completed
+        served = sum(r.size for r in reqs)
+        out = {
+            "arch": self.cfg.name,
+            "family": self.cfg.family,
+            "requests": len(reqs),
+            "served": served,
+            "throughput_samples_per_s":
+                round(served / self._drain_wall, 1) if self._drain_wall
+                else 0.0,
+            "latency": latency_stats(list(reqs)),
+        }
+        if self.family == "dwn":
+            out.update({
+                "mode": "dwn-classify",
+                "datapath": self.backend.name,
+                "backends": available_backends(),
+                "bit_exact_vs_oracle": self.bit_exact,
+                "buckets": list(self.scheduler.buckets),
+                "compiles": self.compile_counts(),
+                "data_parallel": self.data_parallel,
+                "devices": self.n_data,
+                "luts": self.cfg.dwn_luts,
+                "bits_per_feature": self.cfg.dwn_bits,
+            })
+        else:
+            out.update({
+                "mode": "lm-generate",
+                "prompt_len": self.prompt_len,
+                "generated": self.gen,
+                "model_parallel": self.tp,
+            })
+            if self._lm_stats:
+                out["prefill_s"] = round(
+                    float(np.mean([s[0] for s in self._lm_stats])), 3)
+                out["decode_s_per_tok"] = round(
+                    float(np.mean([s[1] for s in self._lm_stats])), 4)
+        return out
+
+
+__all__ = ["ServingEngine"]

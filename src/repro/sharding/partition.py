@@ -59,6 +59,7 @@ DEFAULT_RULES: dict[str, object] = {
     "act_vocab": "model",
     "kv_seq": None,            # kv-cache seq dim (decode)
     "kv_seq_sp": "data",       # kv-cache seq dim, sequence-sharded
+    "dwn_batch": "dp",         # DWN serving batch buckets: data-parallel
 }
 
 

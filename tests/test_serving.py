@@ -1,0 +1,248 @@
+"""Serving subsystem: backend parity, scheduler bucketing, engine + CLI.
+
+Covers the three layers of ``repro.serving``:
+
+* scheduler: admission order, power-of-two bucket padding, coalescing,
+  oversize splitting, queue-vs-compute latency accounting (pure numpy —
+  no jax needed);
+* backends: every registered non-oracle backend bit-exact against the
+  ``apply_hard`` float oracle on all three JSC serving presets, verified
+  by the engine's startup gate;
+* engine: ragged request streams compile at most once per
+  (backend, bucket); data-parallel shard_map serving stays bit-exact
+  (8-device subprocess); the serve CLI smoke-runs end to end.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.serving import (MicrobatchScheduler, ServingEngine,
+                           available_backends, power_of_two_buckets)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# scheduler (no jax)
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder():
+    sched = MicrobatchScheduler(max_bucket=64, min_bucket=8)
+    assert sched.buckets == (8, 16, 32, 64)
+    assert power_of_two_buckets(16, 16) == (16,)
+    assert sched.bucket_for(1) == 8
+    assert sched.bucket_for(8) == 8
+    assert sched.bucket_for(9) == 16
+    assert sched.bucket_for(64) == 64
+    with pytest.raises(AssertionError):
+        power_of_two_buckets(12, 64)          # min not a power of two
+
+
+def _row_id_step(shapes_seen):
+    """Step fn whose per-row output identifies the input row exactly."""
+    def step(x):
+        shapes_seen.append(x.shape[0])
+        return (x[:, 0].copy(),)              # row tag
+    return step
+
+
+def test_scheduler_ragged_admission_order_and_padding():
+    sched = MicrobatchScheduler(max_bucket=64, min_bucket=8)
+    sizes = [5, 17, 40, 3, 64, 1, 100, 2]
+    reqs = []
+    for i, n in enumerate(sizes):
+        # payload rows tagged with (request id, row) so results are traceable
+        x = np.full((n, 4), float(i), np.float32)
+        x[:, 0] = i * 1000 + np.arange(n)
+        reqs.append(sched.submit(x))
+    shapes = []
+    done = sched.drain_batched(_row_id_step(shapes))
+
+    # every request served, results routed back to the right request
+    assert len(done) == len(sizes)
+    for i, r in enumerate(sorted(done, key=lambda r: r.rid)):
+        expect = i * 1000 + np.arange(sizes[i], dtype=np.float32)
+        np.testing.assert_array_equal(r.result[0], expect)
+
+    # admission order: service start times never decrease with rid
+    starts = [r.t_start for r in sorted(done, key=lambda r: r.rid)]
+    assert all(a <= b + 1e-9 for a, b in zip(starts, starts[1:]))
+
+    # only ladder shapes ever reach the step fn (bounded JIT signatures)
+    assert set(shapes) <= set(sched.buckets)
+
+    # oversize request (100 > 64) split into max_bucket chunks
+    big = next(r for r in done if r.size == 100)
+    assert big.buckets == (64, 64)
+    assert len(big.result[0]) == 100
+
+    # latency accounting is populated and ordered
+    for r in done:
+        assert r.t_submit <= r.t_start <= r.t_done
+        assert r.queue_ms >= 0 and r.compute_ms >= 0
+        assert r.total_ms >= r.compute_ms
+
+
+def test_scheduler_coalesces_small_requests():
+    sched = MicrobatchScheduler(max_bucket=32, min_bucket=8)
+    for i in range(6):
+        sched.submit(np.full((4, 2), i, np.float32))
+    shapes = []
+    sched.drain_batched(_row_id_step(shapes))
+    # 6 x 4 samples coalesce into one 24-sample microbatch -> one 32 pad
+    assert shapes == [32]
+
+
+def test_scheduler_serial_latency_accounting():
+    sched = MicrobatchScheduler(max_bucket=8)
+    sched.submit({"tokens": np.zeros((2, 4))}, size=2)
+    done = sched.drain_serial(lambda payload: {"ok": True})
+    assert done[0].result == {"ok": True}
+    assert done[0].t_done >= done[0].t_start >= done[0].t_submit
+
+
+# ---------------------------------------------------------------------------
+# backends: bit-exact parity vs the oracle on all three serving presets
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["dwn-jsc-sm", "dwn-jsc-md", "dwn-jsc-lg"])
+def test_backend_parity_vs_oracle(arch):
+    engine = ServingEngine(arch, max_bucket=32, min_bucket=8, n_train=1200,
+                           verify=True)
+    non_oracle = [b for b in available_backends() if b != "float-oracle"]
+    assert sorted(engine.bit_exact) == sorted(non_oracle)
+    assert all(engine.bit_exact.values()), engine.bit_exact
+
+
+def test_backend_parity_multiblock_bucket():
+    # buckets >= 128 exercise the fused kernel's multi-block batch grid;
+    # the startup probe runs at max_bucket so this is verified, not assumed
+    engine = ServingEngine("dwn-jsc-sm", max_bucket=256, min_bucket=8,
+                           n_train=800, verify=True)
+    assert all(engine.bit_exact.values()), engine.bit_exact
+    assert 256 in engine.backends["fused-packed"].compiles
+
+
+def test_backend_registry_and_config_selection():
+    assert {"fused-packed", "packed-xla", "float-oracle"} <= set(
+        available_backends())
+    # dwn_datapath on the arch picks the backend; CLI arg overrides
+    eng = ServingEngine("dwn-jsc-sm-xla", max_bucket=16, n_train=600,
+                        verify=False)
+    assert eng.backend.name == "packed-xla"
+    eng = ServingEngine("dwn-jsc-sm", max_bucket=16, n_train=600,
+                        backend="float-oracle", verify=False)
+    assert eng.backend.name == "float-oracle"
+
+
+# ---------------------------------------------------------------------------
+# engine: ragged stream, compile bound, report
+# ---------------------------------------------------------------------------
+
+def test_engine_ragged_stream_compiles_once_per_bucket():
+    engine = ServingEngine("dwn-jsc-sm", max_bucket=64, min_bucket=8,
+                           n_train=800, verify=True)
+    rng = np.random.default_rng(0)
+    sizes = [5, 17, 64, 3, 100, 23, 64, 9, 2, 31]
+    for n in sizes:
+        engine.submit(engine.make_request(n, seed=int(rng.integers(2**31))))
+    done = engine.drain()
+    assert sum(r.size for r in done) == sum(sizes)
+
+    # at most one XLA trace per (backend, bucket), buckets from the ladder
+    for backend, per_bucket in engine.compile_counts().items():
+        assert set(per_bucket) <= set(engine.scheduler.buckets), backend
+        assert all(v == 1 for v in per_bucket.values()), (backend, per_bucket)
+
+    # predictions bit-exact vs the oracle for every request
+    oracle = engine.backends["float-oracle"]
+    for r in done:
+        counts, pred = (np.asarray(a) for a in
+                        oracle.step_for(r.payload.shape[0])(r.payload))
+        np.testing.assert_array_equal(np.asarray(r.result[0]), counts)
+        np.testing.assert_array_equal(np.asarray(r.result[1]), pred)
+
+    rep = engine.report()
+    assert rep["served"] == sum(sizes)
+    assert rep["latency"]["queue_ms"]["p50"] >= 0
+    assert rep["latency"]["compute_ms"]["p50"] > 0
+    assert rep["bit_exact_vs_oracle"] == {"fused-packed": True,
+                                          "packed-xla": True}
+
+
+# ---------------------------------------------------------------------------
+# data-parallel sharding (8 fake host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+DP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, json
+    sys.path.insert(0, sys.argv[1])
+    import numpy as np
+    from repro.serving import ServingEngine
+
+    eng = ServingEngine("dwn-jsc-sm", max_bucket=64, min_bucket=8,
+                        n_train=800, backend="packed-xla")
+    for n in (64, 17, 40, 8):
+        eng.submit(eng.make_request(n, seed=n))
+    done = eng.drain()
+    oracle = eng.backends["float-oracle"]
+    exact = True
+    for r in done:
+        counts, pred = (np.asarray(a) for a in
+                        oracle.step_for(r.payload.shape[0])(r.payload))
+        exact &= np.array_equal(np.asarray(r.result[0]), counts)
+        exact &= np.array_equal(np.asarray(r.result[1]), pred)
+    rep = eng.report()
+    print("RESULT " + json.dumps({
+        "devices": rep["devices"], "dp": rep["data_parallel"],
+        "exact": bool(exact), "served": rep["served"],
+        "startup_check": rep["bit_exact_vs_oracle"]}))
+""")
+
+
+def test_engine_data_parallel_shard_map():
+    proc = subprocess.run(
+        [sys.executable, "-c", DP_SCRIPT, str(ROOT / "src")],
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, proc.stdout[-2000:]
+    out = json.loads(line[0][len("RESULT "):])
+    assert out["devices"] == 8 and out["dp"] is True
+    assert out["exact"] is True
+    assert out["served"] == 64 + 17 + 40 + 8
+    assert out["startup_check"] == {"fused-packed": True, "packed-xla": True}
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke
+# ---------------------------------------------------------------------------
+
+def test_serve_cli_smoke():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "dwn-jsc-sm",
+         "--reduced", "--requests", "4", "--batch", "32", "--ragged"],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=str(ROOT))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    rep = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert rep["mode"] == "dwn-classify"
+    assert rep["datapath"] == "fused-packed"
+    assert rep["bit_exact_vs_oracle"] == {"fused-packed": True,
+                                          "packed-xla": True}
+    assert rep["served"] >= 4
+    assert rep["latency_ms_p50"] > 0
+    assert all(v == 1 for per in rep["compiles"].values()
+               for v in per.values())
