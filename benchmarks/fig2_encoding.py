@@ -1,48 +1,34 @@
 """Fig. 2 — distributive vs uniform thermometer encoding of JSC sample 0.
 
-Prints the two encodings side by side (ASCII) and the accuracy delta of a
-small DWN trained under each mode — the paper's reason for paying the
-distributive encoder's irregular-comparator cost.
+Thin wrapper over ``repro.sweep.artifacts`` (``placement_popcounts`` +
+``encoding_mode_accuracy`` — same recipe/seeds as before the sweep
+refactor, same numbers).  Prints the two encodings side by side and the
+accuracy delta of a small DWN trained under each mode — the paper's
+reason for paying the distributive encoder's irregular-comparator cost.
 """
 
 from .common import csv_row, Timer
 
 
 def run():
-    import numpy as np
-    import jax
-    from repro.core import JSC_PRESETS, train_dwn, freeze, eval_accuracy_hard
-    from repro.core.thermometer import ThermometerSpec, fit_thresholds, encode_np
-    from repro.core.warmstart import warmstart_dwn
     from repro.data.jsc import load_jsc
-    import dataclasses
+    from repro.sweep.artifacts import (encoding_mode_accuracy,
+                                       placement_popcounts)
 
     data = load_jsc(8000, 2000)
-    spec_d = ThermometerSpec(16, 200, "distributive")
-    spec_u = ThermometerSpec(16, 200, "uniform")
-    th_d = fit_thresholds(data.x_train, spec_d)
-    th_u = fit_thresholds(data.x_train, spec_u)
-
-    x0 = data.x_train[:1]
-    bits_d = encode_np(x0, th_d, flatten=False)[0]
-    bits_u = encode_np(x0, th_u, flatten=False)[0]
+    pops = placement_popcounts(data, ("distributive", "uniform"))
     print("feature | x value | distributive popcount | uniform popcount")
     for f in range(6):
-        print(f"  f{f:02d}   | {x0[0, f]:+.3f} | "
-              f"{int(bits_d[f].sum()):4d}/200 | {int(bits_u[f].sum()):4d}/200")
+        print(f"  f{f:02d}   | {data.x_train[0, f]:+.3f} | "
+              f"{int(pops['distributive'][f]):4d}/200 | "
+              f"{int(pops['uniform'][f]):4d}/200")
 
     accs = {}
     for mode in ("distributive", "uniform"):
-        cfg = dataclasses.replace(JSC_PRESETS["sm-50"], encoding=mode)
-        params, buffers = warmstart_dwn(jax.random.PRNGKey(0), cfg,
-                                        data.x_train, data.y_train)
         with Timer() as t:
-            res = train_dwn(cfg, data, epochs=6, batch=128, lr=1e-3,
-                            params=params, buffers=buffers, verbose=False)
-        acc = eval_accuracy_hard(freeze(res.params, res.buffers, cfg),
-                                 data.x_test, data.y_test)
-        accs[mode] = acc
-        csv_row(f"fig2/{mode}", t.us, f"acc={acc:.4f}")
+            accs[mode] = encoding_mode_accuracy(data, "sm-50", mode,
+                                                epochs=6)
+        csv_row(f"fig2/{mode}", t.us, f"acc={accs[mode]:.4f}")
     print(f"\ndistributive={accs['distributive']:.4f} "
           f"uniform={accs['uniform']:.4f} "
           f"delta={accs['distributive'] - accs['uniform']:+.4f} "

@@ -1,5 +1,7 @@
 """Fig. 5 — component LUT breakdown of DWN-PEN+FT vs input bit-width.
 
+Thin wrapper over ``repro.sweep.artifacts.breakdown_rows`` (the per-width
+``dwn_hw_report`` loop moved there in the sweep refactor — same numbers).
 Reproduces the paper's finding: encoders dominate small models at every
 bit-width; for lg-2400 the LUT layer + popcount take over below ~10 bits.
 """
@@ -8,20 +10,13 @@ from .common import load_trained, csv_row, Timer
 
 
 def run():
-    from repro.core.model import freeze
-    from repro.hw.cost import dwn_hw_report
+    from repro.sweep.artifacts import PRESETS, breakdown_rows
 
     out = {}
-    for name in ("sm-10", "sm-50", "md-360", "lg-2400"):
+    for name in PRESETS:
         b = load_trained(name)
-        rows = []
         with Timer() as t:
-            for bits in (6, 7, 8, 9, 10, 11, 12):
-                frozen = b["frozen_ft"]
-                rep = dwn_hw_report(frozen, variant="PEN+FT", name=name,
-                                    input_bits=bits)
-                total = max(rep.total_luts, 1)
-                rows.append((bits, rep.luts, total))
+            rows = breakdown_rows(b["frozen_ft"], name)
         out[name] = rows
         csv_row(f"fig5/{name}", t.us,
                 f"enc_frac@6b={rows[0][1]['encoder'] / rows[0][2]:.2f};"

@@ -1,32 +1,29 @@
 """Fig. 6 — Pareto frontier of LUT-based architectures on JSC
-(accuracy vs LUTs, log-x ASCII plot + frontier listing)."""
+(accuracy vs LUTs, log-x ASCII plot + frontier listing).
+
+Thin wrapper over ``repro.sweep``: the point assembly lives in
+``sweep.artifacts`` (literature rows + our TEN/PEN+FT operating points)
+and the frontier rule is ``sweep.results.pareto_front`` — the same
+staircase every sweep Pareto view uses, producing the same frontier as
+the pre-refactor inline loop.
+"""
 
 from .common import load_trained, csv_row, Timer
 
 
 def run():
     import math
-    from repro.hw.cost import dwn_hw_report
-    from repro.hw.report import PAPER_TABLE2
+    from repro.sweep.artifacts import PRESETS, literature_points, our_points
+    from repro.sweep.results import pareto_front
 
-    points = [(m, a, l) for (m, a, l, *_r) in PAPER_TABLE2
-              if not m.startswith("DWN")]
+    points = literature_points()
     with Timer() as t:
-        for name in ("sm-10", "sm-50", "md-360", "lg-2400"):
-            b = load_trained(name)
-            ten = dwn_hw_report(b["frozen_ten"], variant="TEN", name=name)
-            ft = dwn_hw_report(b["frozen_ft"], variant="PEN+FT", name=name,
-                               input_bits=b["ft_bits"])
-            points.append((f"DWN-TEN({name})[ours]", 100 * b["float_acc"],
-                           ten.total_luts))
-            points.append((f"DWN-PEN+FT({name})[ours]", 100 * b["ft_acc"],
-                           ft.total_luts))
+        for name in PRESETS:
+            points.extend(our_points(load_trained(name), name))
 
     # Pareto frontier: maximize acc, minimize LUTs
-    frontier = []
-    for m, a, l in sorted(points, key=lambda p: p[2]):
-        if not frontier or a > frontier[-1][1]:
-            frontier.append((m, a, l))
+    frontier = pareto_front(points, cost=lambda p: p[2],
+                            score=lambda p: p[1])
     csv_row("fig6/pareto", t.us,
             "frontier=" + "|".join(m for m, _, _ in frontier))
 

@@ -1,4 +1,5 @@
-"""Benchmark harness: one entry per paper table/figure + roofline + kernels.
+"""Benchmark harness: every benchmark family behind one command —
+paper tables/figures, roofline, kernels, serving, and the sweep smoke.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only table1,fig5]
 Each benchmark prints ``name,us_per_call,derived`` CSV rows followed by its
@@ -16,7 +17,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     from . import (table1_hardware, table2_literature, table3_quantization,
                    fig2_encoding, fig5_breakdown, fig6_pareto,
-                   roofline_report, kernels_bench, serve_bench)
+                   roofline_report, kernels_bench, serve_bench, sweep_smoke)
     benches = {
         "table1": table1_hardware.run,
         "table2": table2_literature.run,
@@ -27,6 +28,7 @@ def main(argv=None):
         "roofline": roofline_report.run,
         "kernels": kernels_bench.run,
         "serve": serve_bench.run,
+        "sweep": sweep_smoke.run,
     }
     only = [s for s in args.only.split(",") if s]
     failures = 0

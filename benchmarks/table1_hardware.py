@@ -1,30 +1,23 @@
 """Table I — hardware comparison of DWN-TEN and DWN-PEN+FT per model size.
 
+Thin wrapper over ``repro.sweep.artifacts.table1_model_rows`` (the row
+logic moved there in the sweep refactor — same calls, same numbers).
 Prints our generator's LUT/FF/delay next to the paper's Vivado numbers
-with % error, plus the A x D product.  The TEN column exercises only the
-LUT layer + classification logic (what [13] reported); PEN+FT adds the
-thermometer encoders at the fine-tuned input bit-width.
+with % error, plus the A x D product.
 """
 
 from .common import load_trained, csv_row, Timer
 
 
 def run():
-    from repro.hw.cost import dwn_hw_report
-    from repro.hw.report import PAPER_TABLE1
+    from repro.sweep.artifacts import PRESETS, table1_model_rows
 
     rows = []
-    for name in ("sm-10", "sm-50", "md-360", "lg-2400"):
+    for name in PRESETS:
         b = load_trained(name)
         with Timer() as t:
-            rep_ten = dwn_hw_report(b["frozen_ten"], variant="TEN",
-                                    name=name)
-            rep_ft = dwn_hw_report(b["frozen_ft"], variant="PEN+FT",
-                                   name=name, input_bits=b["ft_bits"])
-        for variant, rep in (("TEN", rep_ten), ("PEN+FT", rep_ft)):
-            paper = PAPER_TABLE1.get((name, variant), {})
-            err = (100.0 * (rep.total_luts - paper["luts"]) / paper["luts"]
-                   if paper else float("nan"))
+            model_rows = table1_model_rows(b, name)
+        for variant, rep, paper, err in model_rows:
             rows.append((name, variant, rep, paper, err))
             csv_row(f"table1/{name}/{variant}", t.us,
                     f"luts={rep.total_luts};ffs={rep.total_ffs};"

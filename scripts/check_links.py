@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Markdown link checker for README.md + docs/ (the CI docs job).
+
+Validates every relative link and image target resolves to a real file,
+and every intra-repo anchor (#section) matches a heading in the target
+file.  External (http/https/mailto) links are not fetched — CI must work
+offline.
+
+Usage: python scripts/check_links.py [root]
+Exit code: 0 when all links resolve, 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def anchor_of(heading: str) -> str:
+    """GitHub's heading -> anchor rule (lowercase, drop punctuation,
+    spaces to dashes)."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_in(md: Path) -> set[str]:
+    return {anchor_of(m.group(1))
+            for m in HEADING_RE.finditer(md.read_text())}
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    errors = []
+    for m in LINK_RE.finditer(md.read_text()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if not path_part:                       # same-file anchor
+            dest = md
+        else:
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md.relative_to(root)}: broken link "
+                              f"-> {target}")
+                continue
+        if anchor and dest.suffix == ".md":
+            if anchor_of(anchor) not in anchors_in(dest):
+                errors.append(f"{md.relative_to(root)}: missing anchor "
+                              f"-> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    root = Path((argv or sys.argv[1:] or ["."])[0]).resolve()
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    files = [f for f in files if f.exists()]
+    errors = []
+    for md in files:
+        errors.extend(check_file(md, root))
+    for e in errors:
+        print(f"BROKEN {e}")
+    print(f"checked {len(files)} files: "
+          f"{'all links ok' if not errors else f'{len(errors)} broken'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

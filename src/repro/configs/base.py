@@ -64,7 +64,11 @@ class ArchConfig:
 
     # --- DWN (the paper's own models; family="dwn") ---
     dwn_luts: int = 0                # m (LUT-layer width)
-    dwn_bits: int = 200              # thermometer bits per feature
+    dwn_bits: int = 200              # thermometer bits per feature (T) —
+                                     # the encoder *resolution*, first-class
+                                     # so repro.sweep can sweep it
+    dwn_encoding: str = "distributive"  # threshold placement: "distributive"
+                                        # (quantile) | "uniform" | "gaussian"
     dwn_fused: bool = False          # fused (VMEM-blocked) serving datapath
     dwn_datapath: str = "corner"     # "corner" (baseline) | "gather" (opt)
     dwn_grouping: str = "contig"     # "contig" (paper Fig.1) | "strided"

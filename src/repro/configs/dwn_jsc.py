@@ -70,3 +70,43 @@ register(_dc.replace(_dwn("dwn-jsc-sm50-x", 50), name="dwn-jsc-sm50-pruned",
 register(_dc.replace(_BASE, name="dwn-jsc-lg2400-opt4",
                      dwn_datapath="gather", dwn_grouping="strided",
                      dwn_bits=170))   # lg-2400: ~2700/3200 used -> 169/feature
+
+
+# --- encoding design-space axis (repro.sweep) ------------------------------
+# Encoder resolution (dwn_bits = T) and threshold placement (dwn_encoding)
+# are first-class swept parameters: ``sweep_arch`` derives a servable
+# ArchConfig for any {preset tier} x {T} x {placement} grid point, so the
+# sweep's throughput axis runs the *same* serving engine + backends as
+# production, not a side copy of the datapath.
+
+#: serving-alias tiers the sweep grids draw from: tier -> LUT-layer width m
+SWEEP_TIERS = {"sm-10": 10, "sm-50": 50, "md-360": 360, "lg-2400": 2400}
+
+
+def sweep_arch(preset: str, *, bits: int = 200,
+               placement: str = "distributive",
+               datapath: str = "fused-packed") -> ArchConfig:
+    """Derive the ArchConfig for one encoding-sweep grid point.
+
+    Args:
+      preset: JSC tier name ("sm-10" | "sm-50" | "md-360" | "lg-2400").
+      bits: thermometer bits per feature T (encoder resolution).
+      placement: threshold placement ("distributive"|"uniform"|"gaussian").
+      datapath: serving backend name the point should be timed on.
+
+    Returns an unregistered ArchConfig (grid points are transient — the
+    ServingEngine accepts the instance directly, keeping the registry to
+    durable names only).
+    """
+    luts = SWEEP_TIERS[preset]
+    return _dc.replace(
+        _dwn(f"sweep-{preset}-T{bits}-{placement}", luts, fused=True),
+        dwn_bits=bits, dwn_encoding=placement, dwn_datapath=datapath)
+
+
+# Durable placement variants of the serving aliases, so the placement axis
+# is also reachable from the serve CLI (--arch dwn-jsc-sm-uniform etc.).
+for _pl in ("uniform", "gaussian"):
+    register(_dc.replace(_dwn("dwn-jsc-sm-x", 50, fused=True),
+                         name=f"dwn-jsc-sm-{_pl}", dwn_encoding=_pl,
+                         dwn_datapath="fused-packed"))

@@ -3,7 +3,8 @@
 from .bitpack import (PackedBits, pack_bits, unpack_bits, pack_bits_np,
                       unpack_bits_np, popcount_u32, popcount_u32_np,
                       words_for_bits, group_masks_np)
-from .thermometer import (ThermometerSpec, fit_thresholds, encode, encode_np,
+from .thermometer import (PLACEMENTS, ThermometerSpec, fit_thresholds,
+                          encode, encode_np,
                           encode_packed, quantize_fixed_point,
                           quantize_thresholds, quantize_inputs,
                           used_threshold_mask, distinct_used_thresholds,
@@ -16,7 +17,8 @@ from .classifier import (group_popcount, group_popcount_packed,
                          accuracy)
 from .model import (DWNConfig, JSC_PRESETS, PAPER_BASELINE_ACC, init_dwn,
                     apply_train, loss_fn, freeze, FrozenDWN, apply_hard,
-                    apply_hard_packed, eval_accuracy_hard)
+                    apply_hard_packed, eval_accuracy_hard,
+                    eval_accuracy_hard_packed)
 from .training import train_dwn, TrainResult, eval_soft
 from .quantize import (ptq_bitwidth_search, finetune_bitwidth_search,
                        PTQResult, FTResult)

@@ -62,7 +62,15 @@ def pack_bits(bits: Array) -> Array:
 
 def unpack_bits(words: Array, num_bits: int,
                 dtype=jnp.float32) -> Array:
-    """Inverse of :func:`pack_bits`: (..., W) uint32 -> (..., num_bits)."""
+    """Inverse of :func:`pack_bits`.
+
+    Args:
+      words: (..., W) uint32 packed words, LSB-first.
+      num_bits: logical bit count N (pad bits beyond N are dropped).
+      dtype: output dtype of the {0, 1} values.
+
+    Returns (..., num_bits) bits.
+    """
     words = jnp.asarray(words, jnp.uint32)
     shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
     b = jnp.bitwise_and(jnp.right_shift(words[..., :, None], shifts),
@@ -94,7 +102,13 @@ def unpack_bits_np(words: np.ndarray, num_bits: int,
 
 
 def popcount_u32(v: Array) -> Array:
-    """Per-word popcount of a uint32 array (SWAR; VPU/kernel-safe)."""
+    """Per-word popcount of a uint32 array (SWAR; VPU/kernel-safe).
+
+    Args:
+      v: uint32 words (any shape).
+
+    Returns uint32 set-bit counts per word, in [0, 32], same shape.
+    """
     v = jnp.asarray(v, jnp.uint32)
     v = v - jnp.bitwise_and(jnp.right_shift(v, 1), jnp.uint32(_M1))
     v = (jnp.bitwise_and(v, jnp.uint32(_M2))
@@ -168,14 +182,20 @@ def group_masks_np(num_bits: int, num_groups: int) -> np.ndarray:
 
 
 @functools.lru_cache(maxsize=None)
+def _group_masks_np_cached(num_bits: int, num_groups: int) -> np.ndarray:
+    return group_masks_np(num_bits, num_groups)
+
+
 def group_masks(num_bits: int, num_groups: int) -> Array:
-    """Device-resident, memoized twin of :func:`group_masks_np`.
+    """Memoized twin of :func:`group_masks_np` staged for device use.
 
     The masks depend only on (num_bits, num_groups) — per model, not per
-    batch — so the serving compile cache and every classifier trace share
-    one staged copy instead of rebuilding the numpy masks per call site.
+    batch — so every classifier call site shares one cached numpy build.
+    Only the *numpy* array is memoized: the ``jnp.asarray`` happens per
+    call so a first call from inside a ``jit`` trace can never cache a
+    tracer (leaked tracers poison every later trace).
     """
-    return jnp.asarray(group_masks_np(num_bits, num_groups))
+    return jnp.asarray(_group_masks_np_cached(num_bits, num_groups))
 
 
 @jax.tree_util.register_pytree_node_class

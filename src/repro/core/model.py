@@ -149,13 +149,37 @@ def apply_hard_packed(frozen: FrozenDWN, x: Array) -> Array:
     return group_popcount_packed(packed, frozen.cfg.num_classes)
 
 
-def eval_accuracy_hard(frozen: FrozenDWN, x: np.ndarray, y: np.ndarray,
-                       batch: int = 4096) -> float:
-    """Streaming hard-path accuracy (hardware semantics)."""
+def _eval_accuracy(fn, x: np.ndarray, y: np.ndarray, batch: int) -> float:
     hits = 0
     n = x.shape[0]
-    fn = jax.jit(lambda xb: predict(apply_hard(frozen, xb)))
     for i in range(0, n, batch):
         pred = np.asarray(fn(jnp.asarray(x[i:i + batch])))
         hits += int((pred == y[i:i + batch]).sum())
     return hits / n
+
+
+def eval_accuracy_hard(frozen: FrozenDWN, x: np.ndarray, y: np.ndarray,
+                       batch: int = 4096) -> float:
+    """Streaming hard-path accuracy (hardware semantics).
+
+    Args:
+      frozen: frozen model (the RTL semantics).
+      x: (N, F) float features; y: (N,) int labels.
+      batch: evaluation batch size (one jit trace per distinct tail size).
+
+    Returns accuracy in [0, 1].
+    """
+    fn = jax.jit(lambda xb: predict(apply_hard(frozen, xb)))
+    return _eval_accuracy(fn, x, y, batch)
+
+
+def eval_accuracy_hard_packed(frozen: FrozenDWN, x: np.ndarray,
+                              y: np.ndarray, batch: int = 4096) -> float:
+    """Packed-bitplane twin of :func:`eval_accuracy_hard`.
+
+    Same accuracy bit-for-bit (``apply_hard_packed`` is exact vs
+    ``apply_hard``) but every intermediate bit tensor is uint32 words —
+    the evaluator the ``repro.sweep`` accuracy axis runs on.
+    """
+    fn = jax.jit(lambda xb: predict(apply_hard_packed(frozen, xb)))
+    return _eval_accuracy(fn, x, y, batch)

@@ -7,7 +7,12 @@ Faithful to Mecik & Kumm §III / Bacellar et al. (ESANN 2022, [23]):
   (i+1)/(T+1) quantiles of the training distribution of that feature,
   producing non-uniform thresholds (each one an independent comparator in
   hardware — Fig. 3 of the paper);
-* *uniform* encoding spaces thresholds evenly over [-1, 1).
+* *uniform* encoding spaces thresholds evenly over [-1, 1);
+* *gaussian* encoding (DWN [13] / Bacellar et al.) places thresholds at
+  the normal quantiles of a per-feature N(mean, std) fit — the closed-form
+  stand-in for distributive placement when only two moments of the
+  training distribution are available.  A design-space axis swept by
+  ``repro.sweep``.
 
 The encode path is pure JAX so it is differentiable-adjacent (the bits are a
 stop-gradient boundary; thresholds are buffers, never trained) and is the
@@ -48,6 +53,58 @@ class ThermometerSpec:
         return self.num_features * self.bits_per_feature
 
 
+#: Threshold-placement modes accepted by :func:`fit_thresholds` — the
+#: encoding axis of the ``repro.sweep`` design space.
+PLACEMENTS = ("distributive", "uniform", "gaussian")
+
+
+def _norm_ppf(q: np.ndarray) -> np.ndarray:
+    """Inverse standard-normal CDF (Acklam's rational approximation).
+
+    Args:
+      q: probabilities in (0, 1).
+
+    Returns float64 z-scores with |relative error| < 1.2e-9 — more than
+    enough for threshold placement (thresholds are float32 and then PTQ
+    quantized anyway).  Implemented locally so the gaussian placement mode
+    needs no scipy dependency.
+    """
+    q = np.asarray(q, np.float64)
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    plow, phigh = 0.02425, 1.0 - 0.02425
+    x = np.empty_like(q)
+    lo, hi = q < plow, q > phigh
+    mid = ~(lo | hi)
+    if lo.any():
+        u = np.sqrt(-2.0 * np.log(q[lo]))
+        x[lo] = ((((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4])
+                  * u + c[5])
+                 / ((((d[0] * u + d[1]) * u + d[2]) * u + d[3]) * u + 1.0))
+    if hi.any():
+        u = np.sqrt(-2.0 * np.log(1.0 - q[hi]))
+        x[hi] = -((((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4])
+                   * u + c[5])
+                  / ((((d[0] * u + d[1]) * u + d[2]) * u + d[3]) * u + 1.0))
+    if mid.any():
+        u = q[mid] - 0.5
+        r = u * u
+        x[mid] = ((((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4])
+                   * r + a[5]) * u
+                  / (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4])
+                     * r + 1.0))
+    return x
+
+
 def normalize_to_unit(x: np.ndarray, lo: np.ndarray | None = None,
                       hi: np.ndarray | None = None):
     """Affine-map features to [-1, 1) per paper §III. Returns (x, lo, hi)."""
@@ -66,20 +123,34 @@ def normalize_to_unit(x: np.ndarray, lo: np.ndarray | None = None,
 def fit_thresholds(x_train: np.ndarray, spec: ThermometerSpec) -> np.ndarray:
     """Fit per-feature thresholds on (already normalized) training data.
 
+    Args:
+      x_train: (N, F) float features, normalized to [-1, 1).
+      spec: encoder shape + placement mode (one of :data:`PLACEMENTS`).
+
     Returns float32 array of shape (F, T), ascending along T.
     """
     x = np.asarray(x_train, np.float32)
     assert x.ndim == 2 and x.shape[1] == spec.num_features, x.shape
     T = spec.bits_per_feature
+    qs = (np.arange(1, T + 1, dtype=np.float64)) / (T + 1)
     if spec.mode == "uniform":
         # Evenly spaced interior thresholds over [-1, 1).
         edges = np.linspace(-1.0, 1.0, T + 2, dtype=np.float32)[1:-1]
         th = np.tile(edges[None, :], (spec.num_features, 1))
     elif spec.mode == "distributive":
-        qs = (np.arange(1, T + 1, dtype=np.float64)) / (T + 1)
         th = np.quantile(x.astype(np.float64), qs, axis=0).T  # (F, T)
+    elif spec.mode == "gaussian":
+        # Normal quantiles of a per-feature N(mean, std) fit, clipped back
+        # into the normalized feature range.
+        mu = x.mean(axis=0, dtype=np.float64)                 # (F,)
+        sd = np.maximum(x.std(axis=0, dtype=np.float64), 1e-6)
+        z = _norm_ppf(qs)                                     # (T,)
+        th = mu[:, None] + sd[:, None] * z[None, :]
+        th = np.clip(th, -1.0,
+                     np.nextafter(np.float32(1.0), np.float32(0.0)))
     else:
-        raise ValueError(f"unknown thermometer mode: {spec.mode!r}")
+        raise ValueError(f"unknown thermometer mode: {spec.mode!r}; "
+                         f"expected one of {PLACEMENTS}")
     # Ascending thresholds (quantile already is; enforce for safety).
     th = np.sort(th.astype(np.float32), axis=1)
     return th

@@ -25,18 +25,24 @@ import math
 import numpy as np
 
 # --- technology constants ---------------------------------------------------
+# All delays in nanoseconds (xcvu9p speed-grade-2 ballpark figures).
 T_LUT_NS = 0.20          # LUT6 switching delay
 T_ROUTE_NS = 0.45        # average routed-net delay
 T_CARRY_NS = 0.05        # per CARRY8 block
 
 
 def comparator_luts(width: int) -> int:
-    """x >= const for a `width`-bit input.
+    """Physical LUT6 count of a constant comparator ``x >= const``.
 
     width<=6 : any boolean function of <=6 inputs is exactly one LUT6.
     Wider    : 6-bit segments produce (gt, eq) via dual-output LUT6_2;
                the combine chain folds into one extra LUT per segment pair
                (carry-assisted).  Net effect: ceil(width/6) + segments-1.
+
+    Args:
+      width: input bit-width of ``x`` (total bits, sign included).
+
+    Returns the LUT6 count (0 for non-positive widths).
     """
     if width <= 0:
         return 0
@@ -45,12 +51,22 @@ def comparator_luts(width: int) -> int:
 
 
 def comparator_levels(width: int) -> int:
+    """Combinational logic depth (LUT levels, unitless) of the same
+    constant comparator: one level of segment LUTs plus a log2 combine
+    tree over the segments."""
     seg = math.ceil(width / 6)
     return 1 + (0 if seg == 1 else math.ceil(math.log2(seg)))
 
 
 def two_input_comparator_luts(width: int) -> int:
-    """x > y, both `width`-bit variables: 2w inputs."""
+    """LUT6 count of a two-variable comparator ``x > y``.
+
+    Args:
+      width: bit-width of *each* operand — the function sees 2*width
+        input bits, segmented six at a time like :func:`comparator_luts`.
+
+    Returns the LUT6 count.
+    """
     if width <= 0:
         return 0
     seg = math.ceil(2 * width / 6)
@@ -58,8 +74,8 @@ def two_input_comparator_luts(width: int) -> int:
 
 
 def mux2_luts(width: int) -> int:
-    """2:1 mux of a `width`-bit value: sel+2 data = 3 inputs/bit; LUT6
-    packs two bits (LUT6_2)."""
+    """LUT6 count of a 2:1 mux of a ``width``-bit value: sel+2 data = 3
+    inputs/bit; one dual-output LUT6_2 packs two bits."""
     return math.ceil(width / 2)
 
 
@@ -67,9 +83,9 @@ def mux2_luts(width: int) -> int:
 
 @dataclasses.dataclass
 class CompressorTreeResult:
-    luts: int
-    stages: int
-    out_bits: int
+    luts: int                  # physical LUT6 count
+    stages: int                # compressor stages (logic levels, unitless)
+    out_bits: int              # result bit-width
 
 
 def popcount_tree(n_bits: int) -> CompressorTreeResult:
@@ -77,7 +93,11 @@ def popcount_tree(n_bits: int) -> CompressorTreeResult:
     then 3:2 (1 LUT) compressors until every column has <= 2 bits, then a
     final ripple-carry add (1 LUT/bit via CARRY8).
 
-    Returns total LUTs, compressor stages, and result width.
+    Args:
+      n_bits: number of 1-bit inputs to count.
+
+    Returns a :class:`CompressorTreeResult` (total LUT6s, compressor
+    stages, result width in bits).
     """
     if n_bits <= 1:
         return CompressorTreeResult(0, 0, max(n_bits, 1))
@@ -121,6 +141,10 @@ def popcount_tree(n_bits: int) -> CompressorTreeResult:
 
 @dataclasses.dataclass
 class ComponentCost:
+    """One component's price: physical LUT6s, flip-flops, and
+    combinational logic levels (unitless depth; multiply by per-level
+    delay to get ns)."""
+
     luts: int
     ffs: int
     levels: int                # combinational logic levels
@@ -132,12 +156,18 @@ class ComponentCost:
 
 def encoder_cost(distinct_per_feature: list[int], input_bits: int,
                  used_bits: int, *, pipeline: bool = True) -> ComponentCost:
-    """Thermometer encoder bank.
+    """Thermometer encoder bank (the PEN on-chip encoder).
 
-    distinct_per_feature: number of *distinct used* threshold values per
-    feature after PTQ dedup (CSE); each is one constant comparator.
-    used_bits: encoder output bits actually wired to the LUT layer
-    (registered at the component boundary when pipelined).
+    Args:
+      distinct_per_feature: number of *distinct used* threshold values per
+        feature after PTQ dedup (CSE); each is one constant comparator.
+      input_bits: fixed-point input width in total bits (sign included) —
+        sets the per-comparator LUT count.
+      used_bits: encoder output bits actually wired to the LUT layer
+        (registered at the component boundary when pipelined — the FF
+        count).
+
+    Returns the encoder's :class:`ComponentCost`.
     """
     n_cmp = int(sum(distinct_per_feature))
     luts = n_cmp * comparator_luts(input_bits)
@@ -146,11 +176,16 @@ def encoder_cost(distinct_per_feature: list[int], input_bits: int,
 
 
 def lut_layer_cost(num_luts: int, *, pipeline: bool = True) -> ComponentCost:
+    """One LUT layer: ``num_luts`` (m) physical LUT6s exactly, one logic
+    level, one output register per LUT when pipelined."""
     return ComponentCost(num_luts, num_luts if pipeline else 0, 1)
 
 
 def popcount_cost(group_size: int, num_classes: int,
                   *, pipeline: bool = True) -> ComponentCost:
+    """Per-class popcount bank: one ``group_size``-input GPC compressor
+    tree per class (see :func:`popcount_tree`); FFs register each class's
+    count when pipelined."""
     tree = popcount_tree(group_size)
     luts = tree.luts * num_classes
     ffs = tree.out_bits * num_classes if pipeline else 0
@@ -160,7 +195,14 @@ def popcount_cost(group_size: int, num_classes: int,
 def argmax_cost(num_classes: int, count_bits: int,
                 *, pipeline: bool = True) -> ComponentCost:
     """Pairwise reduction (Fig. 4): c-1 nodes of (comparator + value mux +
-    index mux); index width grows toward the root."""
+    index mux); index width grows toward the root.
+
+    Args:
+      num_classes: number of class counts reduced.
+      count_bits: bit-width of each count (ceil(log2(group_size + 1))).
+
+    Returns the argmax tree's :class:`ComponentCost`.
+    """
     luts = 0
     idx_bits = 1
     n = num_classes
@@ -183,6 +225,18 @@ def argmax_cost(num_classes: int, count_bits: int,
 
 @dataclasses.dataclass
 class HWReport:
+    """Whole-accelerator cost report.
+
+    Attributes:
+      variant: "TEN" | "PEN" | "PEN+FT".
+      model: model/preset name the report describes.
+      input_bits: PEN fixed-point input width in total bits; None for TEN.
+      luts / ffs: per-component physical LUT6 / flip-flop counts, keyed
+        "encoder" | "lut_layer" | "popcount" | "argmax".
+      levels: end-to-end combinational logic depth (unitless).
+      distinct_comparators: encoder comparators after PTQ dedup.
+    """
+
     variant: str                         # "TEN" | "PEN" | "PEN+FT"
     model: str
     input_bits: int | None
@@ -193,19 +247,24 @@ class HWReport:
 
     @property
     def total_luts(self) -> int:
+        """Total physical LUT6 count over all components."""
         return int(sum(self.luts.values()))
 
     @property
     def total_ffs(self) -> int:
+        """Total flip-flop count over all components."""
         return int(sum(self.ffs.values()))
 
     @property
     def delay_ns(self) -> float:
+        """Unpipelined end-to-end combinational delay estimate in **ns**
+        (levels x per-level LUT+route delay) — the latency column."""
         return self.levels * (T_LUT_NS + T_ROUTE_NS)
 
     @property
     def fmax_mhz(self) -> float:
-        # pipelined between components: critical stage = deepest component
+        """Pipelined clock estimate in **MHz**: with registers between
+        components the critical stage is the deepest single component."""
         return 1e3 / max(self.delay_ns / max(self.levels, 1) *  # per level
                          self._max_stage_levels(), 0.1)
 
@@ -216,7 +275,8 @@ class HWReport:
 
     @property
     def area_delay(self) -> float:
-        """A x D in LUT*ns at the (pipelined) critical stage delay."""
+        """A x D product in **LUT·ns** at the pipelined critical-stage
+        delay (Table I's AxD column)."""
         return self.total_luts * (1e3 / self.fmax_mhz)
 
 
@@ -226,7 +286,17 @@ def dwn_hw_report(frozen, *, variant: str, name: str,
     """Full-accelerator cost for a FrozenDWN (repro.core.model).
 
     TEN: inputs are already thermometer bits -> no encoder.
-    PEN/PEN+FT: distributive encoder at `input_bits` total width (1, n).
+    PEN/PEN+FT: on-chip encoder at `input_bits` total width (1, n).
+
+    Args:
+      frozen: the FrozenDWN whose mapping/thresholds set encoder dedup.
+      variant: "TEN" | "PEN" | "PEN+FT" (PEN variants price the encoder).
+      name: model name recorded in the report.
+      input_bits: PEN input width in total bits (required unless TEN).
+      pipeline: register component boundaries (sets FF counts and makes
+        ``fmax_mhz`` the per-stage estimate).
+
+    Returns the :class:`HWReport` (LUT/FF counts, depth, ns/MHz figures).
     """
     from ..core.thermometer import used_threshold_mask, distinct_used_thresholds
     from ..core.model import DWNConfig  # noqa: F401  (type only)

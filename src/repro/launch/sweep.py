@@ -1,0 +1,179 @@
+"""Sweep CLI: a thin argparse front-end over ``repro.sweep``.
+
+Runs an encoding design-space grid through the shared pipeline (accuracy x
+FPGA cost x kernel/serving throughput), prints the result table + Pareto
+fronts, checks any paper-referenced points against their documented
+tolerances, and writes everything as one JSON artifact.
+
+Usage:
+    python -m repro.launch.sweep --grid tiny --out sweep.json
+    python -m repro.launch.sweep --grid paper --out sweep.json --plots
+    python -m repro.launch.sweep --grid encoding --epochs 2 --no-serve
+    python -m repro.launch.sweep --grid my_points.json --fresh
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+
+from ..sweep import SweepSettings, run_grid
+from ..sweep.artifacts import TABLE1_TEN_TOLERANCE
+
+
+def ascii_scatter(points, *, x_of, y_of, mark_of=lambda p: "*",
+                  y_lo: float, y_hi: float, y_step: float,
+                  x_label: str, log_x: bool = True, width: int = 70):
+    """Print a log-x ASCII scatter (the repo's house plot style)."""
+    xs = [x_of(p) for p in points if y_of(p) is not None]
+    if not xs:
+        print("  (no points with this axis measured)")
+        return
+    x_min = min(xs)
+    x_max = max(x_min + 1, max(xs))
+
+    def col(x):
+        if log_x:
+            span = math.log10(max(x_max, 10)) - math.log10(max(x_min, 1))
+            f = ((math.log10(max(x, 1)) - math.log10(max(x_min, 1)))
+                 / max(span, 1e-9))
+        else:
+            f = (x - x_min) / max(x_max - x_min, 1e-9)
+        return min(int(f * (width - 1)), width - 1)
+
+    y = y_hi
+    while y > y_lo:
+        line = [" "] * width
+        for p in points:
+            v = y_of(p)
+            if v is not None and y - y_step <= v < y:
+                line[col(x_of(p))] = mark_of(p)
+        print(f"{y - y_step:8.1f} |" + "".join(line))
+        y -= y_step
+    print(" " * 9 + "-" * width)
+    print(" " * 9 + x_label)
+
+
+def check_paper_points(result) -> list[str]:
+    """Tolerance check of every paper-referenced TEN point.
+
+    Returns a list of failure strings (empty = all TEN references are
+    within the documented tolerance, docs/reproduction.md).
+    """
+    failures = []
+    for r in result.points:
+        if r.paper_luts is None or r.point.variant != "TEN":
+            continue
+        tol = TABLE1_TEN_TOLERANCE.get(r.point.preset)
+        if tol is None:
+            continue
+        err = abs(r.total_luts - r.paper_luts) / r.paper_luts
+        status = "ok" if err <= tol else "FAIL"
+        print(f"  Table I TEN {r.point.preset}: ours={r.total_luts} "
+              f"paper={r.paper_luts} err={100 * err:.1f}% "
+              f"(tol {100 * tol:.0f}%) {status}")
+        if err > tol:
+            failures.append(f"{r.point.preset}: {100 * err:.1f}% "
+                            f"> {100 * tol:.0f}%")
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--grid", default="tiny",
+                    help="named grid (tiny|paper|encoding) or a JSON file "
+                         "of point dicts")
+    ap.add_argument("--out", default="",
+                    help="write the SweepResult JSON here")
+    ap.add_argument("--plots", action="store_true",
+                    help="print ASCII Pareto plots (acc vs LUTs, "
+                         "throughput vs LUTs)")
+    ap.add_argument("--epochs", type=int, default=0,
+                    help="training epochs per model (0 = warmstart only; "
+                         "hardware axes don't need training)")
+    ap.add_argument("--n-train", type=int, default=4000)
+    ap.add_argument("--n-test", type=int, default=2000)
+    ap.add_argument("--no-accuracy", action="store_true",
+                    help="skip the packed hard-accuracy pass")
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="skip fused-kernel timing")
+    ap.add_argument("--serve", dest="serve", action="store_true",
+                    default=True, help="time the serving engine (default)")
+    ap.add_argument("--no-serve", dest="serve", action="store_false")
+    ap.add_argument("--serve-backend", default="fused-packed")
+    ap.add_argument("--cache-dir", default="results/sweep_cache",
+                    help="incremental result cache ('' disables)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="recompute every point (cache is still refreshed)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    settings = SweepSettings(
+        n_train=args.n_train, n_test=args.n_test, seed=args.seed,
+        train_epochs=args.epochs, accuracy=not args.no_accuracy,
+        kernel=not args.no_kernel, serve=args.serve,
+        serve_backend=args.serve_backend)
+    result = run_grid(args.grid, settings,
+                      cache_dir=args.cache_dir or None,
+                      fresh=args.fresh, log=lambda m: print(m, flush=True))
+
+    print()
+    print(result.table())
+
+    front_a = result.accuracy_vs_luts_front()
+    if front_a:
+        print("\nPareto front (accuracy vs LUTs):")
+        for r in front_a:
+            print(f"  {r.total_luts:>8d} LUT  acc={r.accuracy:.3f}  "
+                  f"{r.point.label}")
+    front_t = result.throughput_vs_luts_front()
+    if front_t:
+        print("\nPareto front (serving throughput vs LUTs):")
+        for r in front_t:
+            print(f"  {r.total_luts:>8d} LUT  {r.serve_throughput:>9.0f} "
+                  f"samples/s  {r.point.label}")
+
+    print("\nPaper reference check:")
+    failures = check_paper_points(result)
+    refs = [r for r in result.points if r.paper_luts is not None]
+    if not refs:
+        print("  (no paper-referenced points in this grid)")
+
+    if args.plots:
+        accs = [r.accuracy for r in result.points
+                if r.accuracy is not None]
+        if accs:
+            print("\naccuracy vs log10(LUTs):  T=TEN  P=PEN")
+            lo = math.floor(min(accs) * 20) / 20
+            hi = math.ceil(max(accs) * 20) / 20 + 0.05
+            ascii_scatter(result.points, x_of=lambda r: r.total_luts,
+                          y_of=lambda r: r.accuracy,
+                          mark_of=lambda r: r.point.variant[0],
+                          y_lo=lo, y_hi=hi, y_step=0.05,
+                          x_label="LUTs (log scale)")
+        if any(r.serve_throughput is not None for r in result.points):
+            thr = [r.serve_throughput for r in result.points
+                   if r.serve_throughput is not None]
+            step = max(max(thr) / 10, 1.0)
+            print("\nserving samples/s vs log10(LUTs):")
+            ascii_scatter(result.points, x_of=lambda r: r.total_luts,
+                          y_of=lambda r: r.serve_throughput,
+                          mark_of=lambda r: r.point.variant[0],
+                          y_lo=0.0, y_hi=max(thr) + step, y_step=step,
+                          x_label="LUTs (log scale)")
+
+    if args.out:
+        result.save(args.out)
+        cached = sum(r.cached for r in result.points)
+        print(f"\nwritten {args.out}: {len(result.points)} points "
+              f"({cached} from cache)")
+
+    if failures:
+        print(f"\npaper-tolerance FAILURES: {failures}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -70,9 +70,20 @@ class DWNModelBundle:
 
 def build_dwn_model(cfg: ArchConfig, x_train: np.ndarray,
                     seed: int = 0) -> DWNModelBundle:
-    """Init + freeze the arch's DWN and stage its operands on device."""
+    """Init + freeze the arch's DWN and stage its operands on device.
+
+    Args:
+      cfg: served arch; ``dwn_luts`` (m), ``dwn_bits`` (T) and
+        ``dwn_encoding`` (threshold placement) shape the datapath.
+      x_train: (N, F) normalized features the thresholds are fit on.
+      seed: PRNG seed for the (untrained) LUT init — backends compare
+        datapaths, not weights, so determinism is what matters.
+
+    Returns the staged :class:`DWNModelBundle`.
+    """
     dcfg = DWNConfig(lut_counts=(cfg.dwn_luts,),
-                     bits_per_feature=cfg.dwn_bits)
+                     bits_per_feature=cfg.dwn_bits,
+                     encoding=cfg.dwn_encoding)
     params, buffers = init_dwn(jax.random.PRNGKey(seed), dcfg, x_train)
     frozen = freeze(params, buffers, dcfg)
     return DWNModelBundle(

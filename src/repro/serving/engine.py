@@ -215,7 +215,15 @@ class ServingEngine:
     # ------------------------------------------------------------------
 
     def make_request(self, size: int, seed: int = 0) -> Any:
-        """Synthesize one request payload of ``size`` samples/sequences."""
+        """Synthesize one request payload.
+
+        Args:
+          size: samples (DWN: feature rows drawn from the test split) or
+            sequences (LM: random token prompts of ``prompt_len``).
+          seed: draw seed, so streams are reproducible.
+
+        Returns the payload in the shape :meth:`submit` expects.
+        """
         rng = np.random.default_rng(seed)
         if self.family == "dwn":
             sel = rng.integers(0, self.data.x_test.shape[0], size)
@@ -234,7 +242,16 @@ class ServingEngine:
         return batch
 
     def submit(self, payload: Any) -> Request:
-        """Enqueue one request (admission order is service order)."""
+        """Enqueue one request (admission order is service order).
+
+        Args:
+          payload: (size, F) feature array (DWN) or an LM batch dict with
+            a (size, prompt_len) ``tokens`` entry.
+
+        Returns the queued :class:`Request` (latency fields filled in by
+        the drain that serves it; ``queue_ms``/``compute_ms`` are
+        milliseconds).
+        """
         if self.family == "dwn":
             payload = np.asarray(payload)
             return self.scheduler.submit(payload, payload.shape[0])
@@ -266,7 +283,13 @@ class ServingEngine:
                 for name, b in self.backends.items() if b.compiles}
 
     def report(self) -> dict:
-        """JSON-able serving report over everything drained so far."""
+        """JSON-able serving report over everything drained so far.
+
+        Units: ``throughput_samples_per_s`` is samples (DWN) or sequences
+        (LM) per wall-clock second across all drains;
+        ``latency.{queue,compute,total}_ms`` are per-request millisecond
+        percentiles; LM ``prefill_s`` / ``decode_s_per_tok`` are seconds.
+        """
         reqs: Sequence[Request] = self.scheduler.completed
         served = sum(r.size for r in reqs)
         out = {

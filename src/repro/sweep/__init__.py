@@ -1,0 +1,28 @@
+"""Encoding-aware design-space exploration (the repo's experiment platform).
+
+The paper's headline result — thermometer encoding can dominate DWN
+hardware cost (up to 3.20x LUTs on JSC) — means encoding choices must be
+co-designed with the rest of the accelerator.  ``repro.sweep`` walks that
+design space end-to-end: a grid over {JSC preset, TEN/PEN, thermometer
+bits, threshold placement} runs through one shared pipeline measuring
+accuracy (packed hard inference), FPGA cost (``hw.cost``), and TPU
+throughput (fused kernel + serving engine), emitting one ``SweepResult``
+table, Pareto fronts, and the regenerated paper artifacts.
+
+Entry points: ``python -m repro.launch.sweep --grid paper`` (CLI),
+:func:`run_grid` (library), and ``repro.sweep.artifacts`` (the shared
+logic behind ``benchmarks/{table1,fig2,fig5,fig6}*``).  docs/sweep.md has
+the walkthrough.
+"""
+
+from . import artifacts
+from .cache import SweepCache, config_hash, point_key
+from .grid import GRIDS, SweepPoint, load_grid
+from .pipeline import SweepRunner, SweepSettings, run_grid
+from .results import PointResult, SweepResult, pareto_front
+
+__all__ = [
+    "GRIDS", "PointResult", "SweepCache", "SweepPoint", "SweepResult",
+    "SweepRunner", "SweepSettings", "artifacts", "config_hash", "load_grid",
+    "pareto_front", "point_key", "run_grid",
+]

@@ -1,0 +1,107 @@
+"""Config-hash keyed result cache: grid re-runs are incremental.
+
+Every (point, settings) pair hashes to a stable key; a completed point's
+:class:`~repro.sweep.results.PointResult` is stored as one JSON file under
+the cache root.  Re-running a grid recomputes only the points whose key is
+missing — extend a grid by one axis value and only the new column runs.
+
+The key covers everything that changes the numbers: the grid point, the
+full settings (timing knobs deliberately included — a cached throughput
+measured at a different batch is not the same measurement), and a
+fingerprint of the number-determining source modules (cost model, core
+semantics, the pipeline itself), so editing e.g. a constant in
+``hw/cost.py`` invalidates old entries instead of silently serving them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+
+
+def _code_fingerprint() -> str:
+    """Hash of the source files whose edits change sweep numbers."""
+    import repro.core.model as m1
+    import repro.core.thermometer as m2
+    import repro.hw.cost as m3
+    from . import pipeline as m4
+    h = hashlib.sha256()
+    for mod in (m1, m2, m3, m4):
+        try:
+            with open(mod.__file__, "rb") as fh:
+                h.update(fh.read())
+        except OSError:
+            h.update(mod.__name__.encode())    # no source (frozen): name only
+    return h.hexdigest()[:16]
+
+
+_FINGERPRINT: str | None = None
+
+
+def config_hash(payload: dict) -> str:
+    """Stable short hash of a JSON-able payload (sorted-key canonical form).
+
+    Returns the first 16 hex chars of the sha256 — enough to never collide
+    over any realistic grid, short enough for filenames.
+    """
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def point_key(point, settings) -> str:
+    """Cache key for one (SweepPoint, SweepSettings) pair — also keyed by
+    the code fingerprint (computed once per process)."""
+    global _FINGERPRINT
+    if _FINGERPRINT is None:
+        _FINGERPRINT = _code_fingerprint()
+    return config_hash({"point": point.to_dict(),
+                        "settings": dataclasses.asdict(settings),
+                        "code": _FINGERPRINT})
+
+
+class SweepCache:
+    """Filesystem cache of completed sweep points.
+
+    Args:
+      root: cache directory (created on first ``put``); None disables
+        caching entirely (``get`` always misses, ``put`` is a no-op).
+    """
+
+    def __init__(self, root: str | Path | None):
+        self.root = Path(root) if root else None
+
+    def _path(self, key: str) -> Path:
+        assert self.root is not None
+        return self.root / f"{key}.json"
+
+    def get(self, key: str) -> dict | None:
+        """Return the cached result dict for ``key``, or None on miss.
+
+        A corrupt cache file (interrupted write) reads as a miss, never an
+        error — the point just recomputes.
+        """
+        if self.root is None:
+            return None
+        p = self._path(key)
+        if not p.exists():
+            return None
+        try:
+            with open(p) as fh:
+                return json.load(fh)
+        except (json.JSONDecodeError, OSError):
+            return None
+
+    def put(self, key: str, result: dict) -> None:
+        """Store a result dict under ``key`` (atomic rename write)."""
+        if self.root is None:
+            return
+        self.root.mkdir(parents=True, exist_ok=True)
+        tmp = self._path(key).with_suffix(".tmp")
+        with open(tmp, "w") as fh:
+            json.dump(result, fh, indent=1)
+        tmp.replace(self._path(key))
+
+
+__all__ = ["SweepCache", "config_hash", "point_key"]

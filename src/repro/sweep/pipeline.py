@@ -1,0 +1,257 @@
+"""The shared sweep pipeline: every grid point takes the same path.
+
+For each :class:`~repro.sweep.grid.SweepPoint` the runner
+
+1. instantiates the model config (`core.model.DWNConfig` with the point's
+   LUT-layer width, encoder resolution T, and threshold placement) and
+   builds/trains it once per unique (preset, T, placement) — TEN and PEN
+   variants of the same model share weights, as in the paper;
+2. computes **hard-inference accuracy** through ``apply_hard_packed``
+   (the packed uint32 datapath, bit-exact vs the float oracle);
+3. scores **FPGA cost** via ``hw.cost.dwn_hw_report`` — the full
+   encoder / LUT-layer / popcount / argmax breakdown;
+4. times the **fused packed Pallas kernel** (µs per batch, best of k) and
+   the **serving engine** (samples/s through the scheduler + backend that
+   production serving uses) on that exact config.
+
+Results cache by config hash (``repro.sweep.cache``) so re-running a grid
+recomputes only new points.
+
+Fidelity knobs live in :class:`SweepSettings`.  The default
+``train_epochs=0`` trains nothing and relies on the correlation warmstart
+(``core.warmstart``), which is enough for the hardware axes (TEN LUT
+counts are training-invariant) and gives indicative — not paper-grade —
+accuracies; raise ``--epochs`` for the real accuracy axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (JSC_PRESETS, eval_accuracy_hard_packed, freeze,
+                    init_dwn, train_dwn)
+from ..core.model import DWNConfig, FrozenDWN
+from ..core.warmstart import warmstart_dwn
+from ..data.jsc import load_jsc
+from ..hw.cost import dwn_hw_report
+from ..kernels.fused import ops as fused_ops
+from .artifacts import lut_error_pct, paper_reference
+from .cache import SweepCache, point_key
+from .grid import SweepPoint, load_grid
+from .results import PointResult, SweepResult
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSettings:
+    """Fidelity/measurement knobs shared by every point of one sweep.
+
+    Attributes:
+      n_train / n_test: JSC split sizes (samples).
+      data_seed / seed: dataset and model-init PRNG seeds.
+      train_epochs: gradient epochs per model; 0 = warmstart only.
+      train_batch / lr: training shape (match ``benchmarks/common.py``).
+      warmstart: correlation-based LUT init (``core.warmstart``).
+      accuracy: run the packed hard-accuracy pass.
+      kernel: time the fused packed kernel.
+      kernel_batch: samples per timed kernel call.
+      kernel_iters: timing repetitions (best-of, compile excluded).
+      serve: run the serving-engine throughput axis.
+      serve_backend: datapath backend the engine times.
+      serve_requests / serve_batch: request stream shape (count x size).
+    """
+
+    n_train: int = 4000
+    n_test: int = 2000
+    data_seed: int = 0
+    seed: int = 0
+    train_epochs: int = 0
+    train_batch: int = 128
+    lr: float = 1e-3
+    warmstart: bool = True
+    accuracy: bool = True
+    kernel: bool = True
+    kernel_batch: int = 256
+    kernel_iters: int = 3
+    serve: bool = False
+    serve_backend: str = "fused-packed"
+    serve_requests: int = 2
+    serve_batch: int = 64
+
+
+class SweepRunner:
+    """Runs grid points through the shared pipeline, memoizing models and
+    serving engines across points that share them."""
+
+    def __init__(self, settings: SweepSettings):
+        self.settings = settings
+        self.data = load_jsc(settings.n_train, settings.n_test,
+                             seed=settings.data_seed)
+        self._models: dict[tuple, tuple] = {}       # (preset,T,pl) -> (cfg,p,b)
+        self._serve: dict[tuple, tuple] = {}        # same key -> (thru, p50)
+
+    # -- model / frozen ------------------------------------------------
+
+    def model_for(self, point: SweepPoint):
+        """(DWNConfig, params, buffers) for the point's model shape —
+        built once per unique (preset, T, placement)."""
+        key = (point.preset, point.bits, point.placement)
+        if key not in self._models:
+            s = self.settings
+            cfg = dataclasses.replace(JSC_PRESETS[point.preset],
+                                      bits_per_feature=point.bits,
+                                      encoding=point.placement)
+            if s.warmstart:
+                params, buffers = warmstart_dwn(
+                    jax.random.PRNGKey(s.seed), cfg,
+                    self.data.x_train, self.data.y_train)
+            else:
+                params, buffers = init_dwn(jax.random.PRNGKey(s.seed), cfg,
+                                           self.data.x_train)
+            if s.train_epochs > 0:
+                res = train_dwn(cfg, self.data, epochs=s.train_epochs,
+                                batch=s.train_batch, lr=s.lr, seed=s.seed,
+                                params=params, buffers=buffers,
+                                verbose=False)
+                params, buffers = res.params, res.buffers
+            self._models[key] = (cfg, params, buffers)
+        return self._models[key]
+
+    def frozen_for(self, point: SweepPoint) -> tuple[DWNConfig, FrozenDWN]:
+        """Freeze the point's model to hardware semantics (PEN points
+        quantize thresholds to the point's (1, n) fixed-point grid)."""
+        cfg, params, buffers = self.model_for(point)
+        return cfg, freeze(params, buffers, cfg,
+                           input_frac_bits=point.frac_bits)
+
+    # -- measurement axes ----------------------------------------------
+
+    def _time_kernel(self, frozen: FrozenDWN, cfg: DWNConfig) -> float:
+        """Fused packed kernel wall time in µs per kernel_batch call."""
+        s = self.settings
+        fwd = jax.jit(fused_ops.make_forward_packed(
+            jnp.asarray(frozen.thresholds),
+            [jnp.asarray(i) for i in frozen.mapping_idx],
+            [jnp.asarray(t) for t in frozen.tables_bin],
+            cfg.num_classes))
+        n = self.data.x_test.shape[0]
+        reps = -(-s.kernel_batch // n)             # tile if the split is small
+        x = jnp.asarray(np.tile(self.data.x_test,
+                                (reps, 1))[:s.kernel_batch])
+        fwd(x)[1].block_until_ready()              # compile outside timing
+        best = float("inf")
+        for _ in range(max(s.kernel_iters, 1)):
+            t0 = time.perf_counter()
+            fwd(x)[1].block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6
+
+    def _serve_point(self, point: SweepPoint) -> tuple[float, float]:
+        """(throughput samples/s, p50 compute ms) through the engine —
+        measured once per unique (preset, T, placement)."""
+        key = (point.preset, point.bits, point.placement)
+        if key not in self._serve:
+            from ..configs.dwn_jsc import sweep_arch
+            from ..serving import ServingEngine
+            s = self.settings
+            engine = ServingEngine(
+                sweep_arch(point.preset, bits=point.bits,
+                           placement=point.placement,
+                           datapath=s.serve_backend),
+                backend=s.serve_backend, max_bucket=s.serve_batch,
+                min_bucket=min(8, s.serve_batch),
+                n_train=min(s.n_train, 2000), seed=s.seed)
+            engine.warmup(s.serve_batch)
+            for i in range(s.serve_requests):
+                engine.submit(engine.make_request(s.serve_batch, seed=i))
+            engine.drain()
+            rep = engine.report()
+            self._serve[key] = (
+                rep["throughput_samples_per_s"],
+                rep["latency"]["compute_ms"]["p50"])
+        return self._serve[key]
+
+    # -- one point -----------------------------------------------------
+
+    def run_point(self, point: SweepPoint) -> PointResult:
+        """Run every enabled axis at one grid point."""
+        s = self.settings
+        cfg, frozen = self.frozen_for(point)
+        rep = dwn_hw_report(frozen, variant=point.variant, name=point.preset,
+                            input_bits=point.input_bits)
+        paper = paper_reference(point)
+        res = PointResult(
+            point=point,
+            luts=dict(rep.luts), total_luts=rep.total_luts,
+            total_ffs=rep.total_ffs, delay_ns=round(rep.delay_ns, 3),
+            fmax_mhz=round(rep.fmax_mhz, 1),
+            distinct_comparators=rep.distinct_comparators,
+            paper_luts=paper,
+            lut_error_pct=lut_error_pct(rep.total_luts, paper))
+        if s.accuracy:
+            res.accuracy = eval_accuracy_hard_packed(
+                frozen, self.data.x_test, self.data.y_test)
+        if s.kernel:
+            res.kernel_us = round(self._time_kernel(frozen, cfg), 1)
+            res.kernel_batch = s.kernel_batch
+        if s.serve:
+            thru, p50 = self._serve_point(point)
+            res.serve_throughput = thru
+            res.serve_p50_ms = p50
+            res.serve_backend = s.serve_backend
+        return res
+
+
+def run_grid(grid: str | list, settings: SweepSettings | None = None, *,
+             cache_dir: str | None = "results/sweep_cache",
+             fresh: bool = False, log=None) -> SweepResult:
+    """Run a whole grid through the pipeline, with incremental caching.
+
+    Args:
+      grid: a named grid / JSON path (see ``grid.load_grid``) or an
+        explicit list of :class:`SweepPoint`.
+      settings: fidelity knobs; defaults to :class:`SweepSettings`().
+      cache_dir: result-cache root; None disables caching.
+      fresh: ignore (but still refresh) the cache.
+      log: optional ``print``-like progress callback.
+
+    Returns the :class:`SweepResult` over every point.
+    """
+    settings = settings or SweepSettings()
+    points = load_grid(grid) if isinstance(grid, str) else list(grid)
+    name = grid if isinstance(grid, str) else "custom"
+    cache = SweepCache(cache_dir)
+    runner: SweepRunner | None = None
+    out = []
+    for i, point in enumerate(points):
+        key = point_key(point, settings)
+        hit = None if fresh else cache.get(key)
+        res = None
+        if hit is not None:
+            try:
+                res = PointResult.from_dict(hit)
+                res.cached = True
+            except (TypeError, KeyError):      # stale schema: recompute
+                res = None
+        if res is None:
+            if runner is None:                     # lazy: all-hit runs are free
+                runner = SweepRunner(settings)
+            t0 = time.perf_counter()
+            res = runner.run_point(point)
+            cache.put(key, res.to_dict())
+            if log:
+                log(f"[{i + 1}/{len(points)}] {point.label}: "
+                    f"{res.total_luts} LUTs "
+                    f"({time.perf_counter() - t0:.1f}s)")
+        if log and res.cached:
+            log(f"[{i + 1}/{len(points)}] {point.label}: cached")
+        out.append(res)
+    return SweepResult(grid=name, settings=dataclasses.asdict(settings),
+                       points=out)
+
+
+__all__ = ["SweepRunner", "SweepSettings", "run_grid"]

@@ -1,0 +1,166 @@
+"""Sweep subsystem tests: paper-constant calibration through the sweep
+path, the tiny end-to-end grid, caching, and the new placement mode."""
+
+import numpy as np
+import pytest
+
+from repro.sweep import (SweepPoint, SweepSettings, SweepResult, run_grid,
+                         pareto_front, point_key)
+from repro.sweep.artifacts import (PRESETS, TABLE1_TEN_TOLERANCE,
+                                   paper_reference)
+from repro.sweep.grid import load_grid, paper_grid, tiny_grid
+
+FAST = SweepSettings(n_train=512, n_test=256, accuracy=True,
+                     kernel=False, serve=False)
+
+
+@pytest.fixture(scope="module")
+def tiny_result():
+    return run_grid("tiny", FAST, cache_dir=None)
+
+
+# ---------------------------------------------------------------------------
+# paper-constant calibration through the sweep path
+# ---------------------------------------------------------------------------
+
+def test_table1_ten_rows_within_documented_tolerance():
+    """Table I TEN LUT counts reproduce through the sweep pipeline within
+    the % error tolerances documented in docs/reproduction.md."""
+    pts = [p for p in paper_grid() if p.variant == "TEN"]
+    assert sorted(p.preset for p in pts) == sorted(PRESETS)
+    res = run_grid(pts, FAST, cache_dir=None)
+    for r in res.points:
+        assert r.paper_luts is not None, r.point
+        tol = TABLE1_TEN_TOLERANCE[r.point.preset]
+        err = abs(r.total_luts - r.paper_luts) / r.paper_luts
+        assert err <= tol, (r.point.preset, r.total_luts, r.paper_luts, err)
+        # TEN: no on-chip encoder, and the breakdown must sum to the total
+        assert r.luts["encoder"] == 0
+        assert sum(r.luts.values()) == r.total_luts
+
+
+def test_paper_reference_resolution():
+    assert paper_reference(SweepPoint("sm-50", "TEN")) == 110
+    assert paper_reference(SweepPoint("sm-50", "PEN", input_bits=8)) == 311
+    assert paper_reference(SweepPoint("sm-50", "PEN", input_bits=9)) == 345
+    # off the published operating point -> no reference
+    assert paper_reference(SweepPoint("sm-50", "TEN", bits=100)) is None
+    assert paper_reference(
+        SweepPoint("sm-50", "TEN", placement="uniform")) is None
+
+
+# ---------------------------------------------------------------------------
+# tiny end-to-end grid
+# ---------------------------------------------------------------------------
+
+def test_tiny_grid_encoder_luts_monotone_in_bits(tiny_result):
+    """2 presets x 2 PEN bit-widths: encoder LUTs grow with input width
+    (wider comparators and finer threshold dedup both push up)."""
+    by = {r.point.label: r for r in tiny_result.points}
+    for preset in ("sm-10", "sm-50"):
+        pen4 = by[f"{preset}/PEN@4b/T200/distributive"]
+        pen9 = by[f"{preset}/PEN@9b/T200/distributive"]
+        assert 0 < pen4.luts["encoder"] < pen9.luts["encoder"]
+        ten = by[f"{preset}/TEN/T200/distributive"]
+        assert ten.luts["encoder"] == 0
+        assert ten.total_luts < pen4.total_luts < pen9.total_luts
+
+
+def test_tiny_grid_axes_populated(tiny_result):
+    for r in tiny_result.points:
+        assert 0.0 <= r.accuracy <= 1.0
+        assert r.total_luts > 0 and r.total_ffs > 0
+        assert r.delay_ns > 0 and r.fmax_mhz > 0
+        assert set(r.luts) == {"encoder", "lut_layer", "popcount", "argmax"}
+
+
+def test_sweep_result_json_roundtrip(tmp_path, tiny_result):
+    f = tmp_path / "sweep.json"
+    tiny_result.save(f)
+    loaded = SweepResult.load(f)
+    assert [r.point for r in loaded.points] == \
+        [r.point for r in tiny_result.points]
+    assert [r.total_luts for r in loaded.points] == \
+        [r.total_luts for r in tiny_result.points]
+    assert loaded.settings == tiny_result.settings
+
+
+def test_pareto_front_rule():
+    pts = [("a", 70.0, 10), ("b", 75.0, 100), ("c", 72.0, 50),
+           ("d", 75.0, 200), ("none", None, 5)]
+    front = pareto_front(pts, cost=lambda p: p[2], score=lambda p: p[1])
+    assert [p[0] for p in front] == ["a", "c", "b"]
+
+
+def test_accuracy_vs_luts_front_is_monotone(tiny_result):
+    front = tiny_result.accuracy_vs_luts_front()
+    assert front, "tiny grid must yield a non-empty frontier"
+    luts = [r.total_luts for r in front]
+    accs = [r.accuracy for r in front]
+    assert luts == sorted(luts)
+    assert accs == sorted(accs)
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def test_cache_incremental_rerun(tmp_path):
+    pts = [SweepPoint("sm-10", "TEN")]
+    first = run_grid(pts, FAST, cache_dir=tmp_path)
+    assert not first.points[0].cached
+    second = run_grid(pts, FAST, cache_dir=tmp_path)
+    assert second.points[0].cached
+    assert second.points[0].total_luts == first.points[0].total_luts
+    assert second.points[0].accuracy == first.points[0].accuracy
+    # different settings -> different key -> recompute
+    other = SweepSettings(n_train=513, n_test=256, accuracy=False,
+                          kernel=False, serve=False)
+    assert point_key(pts[0], FAST) != point_key(pts[0], other)
+
+
+def test_grid_resolution(tmp_path):
+    assert len(tiny_grid()) == 6
+    assert len(paper_grid()) == 8
+    with pytest.raises(ValueError):
+        load_grid("no-such-grid")
+    f = tmp_path / "grid.json"
+    f.write_text('[{"preset": "sm-10", "variant": "PEN", "input_bits": 5}]')
+    pts = load_grid(str(f))
+    assert pts == [SweepPoint("sm-10", "PEN", input_bits=5)]
+
+
+# ---------------------------------------------------------------------------
+# gaussian placement + config threading
+# ---------------------------------------------------------------------------
+
+def test_gaussian_placement_thresholds():
+    from repro.core.thermometer import ThermometerSpec, fit_thresholds
+    rng = np.random.default_rng(0)
+    x = np.clip(rng.normal(0, 0.4, (2048, 4)), -1, 0.999).astype(np.float32)
+    th = fit_thresholds(x, ThermometerSpec(4, 32, "gaussian"))
+    assert th.shape == (4, 32)
+    assert np.all(np.diff(th, axis=1) >= 0)          # ascending
+    assert th.min() >= -1.0 and th.max() < 1.0
+    # symmetric input -> median threshold near the feature mean
+    assert np.allclose(th[:, 15], x.mean(axis=0), atol=0.1)
+
+
+def test_norm_ppf_matches_known_quantiles():
+    from repro.core.thermometer import _norm_ppf
+    q = np.array([0.001, 0.025, 0.5, 0.841344746, 0.975, 0.999])
+    z = _norm_ppf(q)
+    ref = np.array([-3.0902, -1.9600, 0.0, 1.0, 1.9600, 3.0902])
+    assert np.allclose(z, ref, atol=2e-4)
+
+
+def test_sweep_arch_threads_encoding_into_serving_model():
+    from repro.configs.dwn_jsc import sweep_arch
+    from repro.serving.backends import build_dwn_model
+    from repro.data.jsc import load_jsc
+    cfg = sweep_arch("sm-10", bits=64, placement="gaussian")
+    assert cfg.dwn_bits == 64 and cfg.dwn_encoding == "gaussian"
+    data = load_jsc(256, 64)
+    model = build_dwn_model(cfg, data.x_train)
+    assert model.dcfg.encoding == "gaussian"
+    assert model.thresholds.shape == (16, 64)
