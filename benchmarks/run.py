@@ -17,7 +17,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     from . import (table1_hardware, table2_literature, table3_quantization,
                    fig2_encoding, fig5_breakdown, fig6_pareto,
-                   roofline_report, kernels_bench, serve_bench, sweep_smoke)
+                   roofline_report, kernels_bench, serve_bench, sweep_smoke,
+                   train_bench)
     benches = {
         "table1": table1_hardware.run,
         "table2": table2_literature.run,
@@ -29,6 +30,7 @@ def main(argv=None):
         "kernels": kernels_bench.run,
         "serve": serve_bench.run,
         "sweep": sweep_smoke.run,
+        "train": train_bench.run,
     }
     only = [s for s in args.only.split(",") if s]
     failures = 0

@@ -60,10 +60,34 @@ def run():
                     lat["p50"] * 1e3,
                     f"thru={per_backend[backend]['throughput_samples_per_s']}"
                     f";p99_ms={lat['p99']}")
+        # auto-select row: per-bucket calibration picks the fastest
+        # bit-exact backend (BENCH history shows the winner is
+        # size-dependent: float-oracle on sm, packed paths on md/lg)
+        engine.use_backend("auto")
+        engine.warmup(BATCH)
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        for _ in range(REQUESTS):
+            engine.submit(engine.make_request(
+                BATCH, seed=int(rng.integers(2**31))))
+        done = engine.drain()
+        wall = time.perf_counter() - t0
+        served = sum(r.size for r in done)
+        lat = latency_stats(done)["compute_ms"]
+        auto_row = {
+            "throughput_samples_per_s": round(served / wall, 1),
+            "latency_ms_p50": lat["p50"],
+            "latency_ms_p99": lat["p99"],
+            "choice": dict(engine.auto.choice),
+        }
+        csv_row(f"serve/{preset}/auto", lat["p50"] * 1e3,
+                f"thru={auto_row['throughput_samples_per_s']}"
+                f";choice={engine.auto.choice}")
         record["presets"][preset] = {
             "luts": engine.cfg.dwn_luts,
             "bit_exact_vs_oracle": engine.bit_exact,
             "backends": per_backend,
+            "auto": auto_row,
         }
 
     with open(BENCH_JSON, "w") as fh:

@@ -59,6 +59,26 @@ def _addresses(sel_bits: Array, fan_in: int) -> Array:
     return jnp.sum(sel_bits.astype(jnp.int32) * weights, axis=-1)
 
 
+def first_max_index(x: Array, vmax: Array | None = None) -> Array:
+    """First index of the row maximum over the last axis (== jnp.argmax).
+
+    Bit-identical to ``jnp.argmax(x, axis=-1)`` — the output is an integer,
+    so there is no fp ambiguity — but lowers to plain vectorized max/min
+    reductions instead of XLA's variadic (value, index) reduce, which is
+    several times slower on CPU for the (m, n, C) score tensors the
+    training hot loop argmaxes every step.
+
+    Args:
+      x: (..., C) values.
+      vmax: optional precomputed ``jnp.max(x, -1, keepdims=True)`` when the
+        caller needs the row max anyway (saves one full reduction).
+    """
+    if vmax is None:
+        vmax = jnp.max(x, axis=-1, keepdims=True)
+    idx = jnp.arange(x.shape[-1], dtype=jnp.int32)
+    return jnp.min(jnp.where(x == vmax, idx, x.shape[-1]), axis=-1)
+
+
 # ---------------------------------------------------------------------------
 # Core custom-VJP op: binarized table lookup with EFD backward.
 # Inputs: sel_bits (B, m, n) in {0,1} float; tables (m, 2^n) float.
@@ -74,10 +94,14 @@ def _lut_lookup_efd(sel_bits: Array, tables: Array) -> Array:
 
 
 def _gather_tables(tables: Array, addr: Array) -> Array:
-    """tables (m, S), addr (B, m) -> (B, m) gathered real values."""
-    return jnp.take_along_axis(
-        jnp.broadcast_to(tables[None], (addr.shape[0],) + tables.shape),
-        addr[..., None], axis=-1)[..., 0]
+    """tables (m, S), addr (B, m) -> (B, m) gathered real values.
+
+    Flat-index take: ``flat[lut * S + addr]`` gathers the same entries as a
+    broadcast + take_along_axis but without staging the (B, m, S) broadcast.
+    """
+    m, S = tables.shape
+    offs = (jnp.arange(m, dtype=jnp.int32) * S)[None, :]     # (1, m)
+    return jnp.take(tables.reshape(-1), addr + offs, axis=0)
 
 
 def _lut_lookup_fwd(sel_bits, tables):
@@ -85,17 +109,18 @@ def _lut_lookup_fwd(sel_bits, tables):
     addr = _addresses(sel_bits, fan_in)
     vals = _gather_tables(tables, addr)
     out = (vals > 0.0).astype(jnp.float32)
-    return out, (sel_bits, tables, addr)
+    # vals ride in the residuals: the backward needs them for the
+    # clipped-STE mask and re-gathering inside lax.scan is pure waste
+    return out, (tables, addr, vals)
 
 
 def _lut_lookup_bwd(res, g):
-    sel_bits, tables, addr = res
-    B, m, n = sel_bits.shape
-    S = tables.shape[-1]
+    tables, addr, vals = res
+    m, S = tables.shape
+    n = S.bit_length() - 1                                   # S == 2^n
 
     # Straight-through binarize: dL/dvals = g, clipped to the linear region
     # (standard clipped-STE; tables are kept in [-1, 1] by the optimizer).
-    vals = _gather_tables(tables, addr)
     g_vals = g * (jnp.abs(vals) <= 1.0).astype(g.dtype)
 
     # Gradient to tables: scatter g at (lut, addr). One-hot einsum keeps it
@@ -115,10 +140,10 @@ def _lut_lookup_bwd(res, g):
 
 
 def _gather_tables_multi(tables: Array, addr: Array) -> Array:
-    """tables (m, S), addr (B, m, n) -> (B, m, n)."""
-    B, m, n = addr.shape
-    t = jnp.broadcast_to(tables[None], (B,) + tables.shape)  # (B, m, S)
-    return jnp.take_along_axis(t, addr, axis=-1)
+    """tables (m, S), addr (B, m, n) -> (B, m, n) via flat-index take."""
+    m, S = tables.shape
+    offs = (jnp.arange(m, dtype=jnp.int32) * S)[None, :, None]  # (1, m, 1)
+    return jnp.take(tables.reshape(-1), addr + offs, axis=0)
 
 
 _lut_lookup_efd.defvjp(_lut_lookup_fwd, _lut_lookup_bwd)
@@ -128,34 +153,91 @@ _lut_lookup_efd.defvjp(_lut_lookup_fwd, _lut_lookup_bwd)
 # Learnable mapping: hard argmax selection forward, softmax STE backward.
 # ---------------------------------------------------------------------------
 
+def _softmax_from_max(scores: Array, vmax: Array) -> Array:
+    """softmax(scores, -1) given the row max (same expression as
+    ``jax.nn.softmax``; the max is shared with the forward's argmax so
+    the backward does one fewer full reduction over (m, n, C))."""
+    e = jnp.exp(scores - vmax)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _d_scores(scores: Array, vmax: Array, g: Array, bits: Array) -> Array:
+    """dL/dscores of the softmax-STE relaxation, reassociated.
+
+    With p = softmax(scores) the textbook form is
+    ``p * (gb - gx)`` where x_soft[b,m,n] = Σ_c p[m,n,c]·bits[b,c],
+    gb = Σ_b g·bits and gx = Σ_b g·x_soft.  Two reassociations, both
+    O(1e-9)-level fp-neutral and large on a bandwidth-bound CPU step:
+
+    * gx = Σ_c p·gb — folds the second (B·m·n·C)-flop x_soft einsum into
+      a multiply-reduce over an array we need anyway;
+    * p is never materialized: with e = exp(scores - max), s = Σe the
+      result is e·(gb - gxn/s)/s with gxn = Σ_c e·gb — one fewer full
+      (m, n, C) division pass.
+
+    This is the training hot loop's dominant cost; the pre-PR form
+    survives verbatim in ``repro.training.reference`` as the baseline.
+    """
+    e = jnp.exp(scores - vmax)                               # (m, n, C)
+    se = jnp.sum(e, axis=-1, keepdims=True)
+    gb = jnp.einsum("bmn,bc->mnc", g, bits)                  # Σ_b g·bits
+    gxn = jnp.sum(e * gb, axis=-1, keepdims=True)
+    return e * (gb - gxn / se) / se
+
+
+def _select_with_max(bits: Array, scores: Array):
+    vmax = jnp.max(scores, axis=-1, keepdims=True)
+    idx = first_max_index(scores, vmax)
+    sel = jnp.take(bits, idx.reshape(-1), axis=1).reshape(
+        bits.shape[0], *idx.shape)
+    return sel, vmax
+
+
 @jax.custom_vjp
 def _select_bits(bits: Array, scores: Array) -> Array:
     """bits (B, C), scores (m, n, C) -> selected (B, m, n) via argmax."""
-    idx = jnp.argmax(scores, axis=-1)                        # (m, n)
-    return jnp.take(bits, idx.reshape(-1), axis=1).reshape(
-        bits.shape[0], *idx.shape)
+    return _select_with_max(bits, scores)[0]
 
 
 def _select_bits_fwd(bits, scores):
-    out = _select_bits(bits, scores)
-    return out, (bits, scores)
+    out, vmax = _select_with_max(bits, scores)
+    return out, (bits, scores, vmax)
 
 
 def _select_bits_bwd(res, g):
-    bits, scores = res
+    bits, scores, vmax = res
     # Soft relaxation p = softmax(scores): x_soft[b,m,n] = Σ_c p[m,n,c] b[b,c]
-    p = jax.nn.softmax(scores, axis=-1)                      # (m, n, C)
     # dL/dbits[b,c]   = Σ_{m,n} g[b,m,n] p[m,n,c]
-    d_bits = jnp.einsum("bmn,mnc->bc", g, p)
     # dL/dscores[m,n,c] = Σ_b g[b,m,n] p[m,n,c] (bits[b,c] - x_soft[b,m,n])
-    x_soft = jnp.einsum("mnc,bc->bmn", p, bits)
-    gb = jnp.einsum("bmn,bc->mnc", g, bits)                  # Σ_b g·bits
-    gx = jnp.einsum("bmn,bmn->mn", g, x_soft)                # Σ_b g·x_soft
-    d_scores = p * (gb - gx[..., None])
-    return d_bits, d_scores
+    p = _softmax_from_max(scores, vmax)                      # (m, n, C)
+    d_bits = jnp.einsum("bmn,mnc->bc", g, p)
+    return d_bits, _d_scores(scores, vmax, g, bits)
 
 
 _select_bits.defvjp(_select_bits_fwd, _select_bits_bwd)
+
+
+# First-layer variant: the encoder bits arrive through stop_gradient, so the
+# d_bits cotangent is dropped by construction.  Declaring that here (instead
+# of relying on XLA to dead-code the einsum) keeps the (B·m·n·C) d_bits GEMM
+# out of the compiled step for every single-hidden-layer JSC model.
+
+@jax.custom_vjp
+def _select_bits_stopgrad(bits: Array, scores: Array) -> Array:
+    return _select_with_max(bits, scores)[0]
+
+
+def _select_bits_sg_fwd(bits, scores):
+    out, vmax = _select_with_max(bits, scores)
+    return out, (bits, scores, vmax)
+
+
+def _select_bits_sg_bwd(res, g):
+    bits, scores, vmax = res
+    return jnp.zeros_like(bits), _d_scores(scores, vmax, g, bits)
+
+
+_select_bits_stopgrad.defvjp(_select_bits_sg_fwd, _select_bits_sg_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -168,9 +250,20 @@ def lut_layer_apply(params, bits: Array) -> Array:
     return _lut_lookup_efd(sel, params["tables"])            # (B, m)
 
 
+def lut_layer_apply_stopgrad(params, bits: Array) -> Array:
+    """First-layer twin of :func:`lut_layer_apply` for stop-gradient inputs.
+
+    Identical forward; the backward skips the d_bits GEMM that a
+    stop_gradient boundary would discard anyway.  Use for the layer fed
+    directly by the (never-trained) thermometer encoder.
+    """
+    sel = _select_bits_stopgrad(bits, params["scores"])      # (B, m, n)
+    return _lut_lookup_efd(sel, params["tables"])            # (B, m)
+
+
 def finalize_mapping(params) -> Array:
     """Freeze the learnable mapping to int32 wire indices (m, n)."""
-    return jnp.argmax(params["scores"], axis=-1).astype(jnp.int32)
+    return first_max_index(params["scores"]).astype(jnp.int32)
 
 
 def binarize_tables(params) -> Array:

@@ -23,8 +23,8 @@ import numpy as np
 from .thermometer import (ThermometerSpec, encode, encode_packed,
                           fit_thresholds, quantize_fixed_point)
 from .lut_layer import (LUTLayerSpec, init_lut_layer, lut_layer_apply,
-                        finalize_mapping, binarize_tables, lut_eval_hard,
-                        lut_eval_hard_packed)
+                        lut_layer_apply_stopgrad, finalize_mapping,
+                        binarize_tables, lut_eval_hard, lut_eval_hard_packed)
 from .classifier import (group_popcount, group_popcount_packed,
                          logits_from_counts, cross_entropy, accuracy,
                          predict)
@@ -87,18 +87,39 @@ def init_dwn(key: Array, cfg: DWNConfig, x_train: np.ndarray):
     return {"layers": layers}, {"thresholds": jnp.asarray(thresholds)}
 
 
-def apply_train(params, buffers, cfg: DWNConfig, x: Array) -> Array:
-    """Differentiable forward: raw features -> class logits."""
-    bits = encode(x, buffers["thresholds"])                  # (B, F*T)
-    bits = jax.lax.stop_gradient(bits)
+def apply_train_from_bits(params, cfg: DWNConfig, bits: Array) -> Array:
+    """Differentiable forward from pre-encoded bits: (B, F*T) -> logits.
+
+    The scan-friendly entry point: thermometer thresholds are buffers
+    (never trained), so the training engine encodes the dataset once and
+    streams {0,1} bit rows here instead of re-encoding every minibatch.
+    Accepts any dtype whose values are {0, 1} (uint8 storage is 4x
+    smaller on device); bit-identical to ``apply_train`` on the same rows.
+    """
+    bits = jax.lax.stop_gradient(bits.astype(jnp.float32))
+    first = True
     for layer in params["layers"]:
-        bits = lut_layer_apply(layer, bits)
+        bits = (lut_layer_apply_stopgrad(layer, bits) if first
+                else lut_layer_apply(layer, bits))
+        first = False
     counts = group_popcount(bits, cfg.num_classes)
     return logits_from_counts(counts, cfg.tau_value)
 
 
+def apply_train(params, buffers, cfg: DWNConfig, x: Array) -> Array:
+    """Differentiable forward: raw features -> class logits."""
+    bits = encode(x, buffers["thresholds"])                  # (B, F*T)
+    return apply_train_from_bits(params, cfg, bits)
+
+
 def loss_fn(params, buffers, cfg: DWNConfig, x: Array, y: Array):
     logits = apply_train(params, buffers, cfg, x)
+    return cross_entropy(logits, y), logits
+
+
+def loss_fn_from_bits(params, cfg: DWNConfig, bits: Array, y: Array):
+    """Cross-entropy twin of :func:`loss_fn` over pre-encoded bits."""
+    logits = apply_train_from_bits(params, cfg, bits)
     return cross_entropy(logits, y), logits
 
 

@@ -1,27 +1,35 @@
-"""DWN training loop (paper §III protocol) — single-host reference trainer.
+"""DWN training (paper §III protocol) — scan-compiled engine front-end.
 
-The at-scale distributed trainer lives in ``repro.launch.train``; this module
-is the faithful reproduction path for the JSC experiments: Adam, StepLR,
-cross-entropy over τ-scaled popcounts, EFD gradients through the LUT layer.
+``train_dwn`` keeps its historical signature but now runs on the
+scan-compiled engine in :mod:`repro.training.engine`: a whole epoch is a
+single device program (on-device ``lax.scan`` over minibatches, donated
+params/optimizer state, StepLR folded into the optimizer-step counter,
+losses fetched once per epoch) instead of a python-per-minibatch loop.
+At fixed seed the loss/accuracy trajectory matches the pre-PR loop within
+fp tolerance — same batch order, same schedule step count — so this is a
+replacement, not a fork; the frozen pre-PR loop survives as
+``repro.training.reference`` for parity tests and benchmarks.
+
+``eval_soft`` keeps its pre-PR batching/averaging exactly, but reads its
+jitted evaluator from the process-wide cache
+(:mod:`repro.training.evaluator`): one compile per (cfg, input_frac_bits)
+per process instead of one per call.
+
+The at-scale distributed LM trainer lives in ``repro.launch.train``;
+multi-seed / multi-grid-point DWN training lives in
+``repro.training.batch``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .model import (DWNConfig, init_dwn, loss_fn, apply_train, freeze,
-                    eval_accuracy_hard)
-from .classifier import accuracy as _acc
-from .thermometer import quantize_fixed_point
-from ..data.jsc import JSCData, batches
-from ..optim.adam import Adam
-from ..optim.schedule import step_lr, constant
+from .model import DWNConfig
+from ..data.jsc import JSCData
 
 Array = jax.Array
 
@@ -35,30 +43,21 @@ class TrainResult:
     soft_test_acc: float
 
 
-def _make_update(cfg: DWNConfig, opt: Adam, input_frac_bits: int | None):
-    @jax.jit
-    def update(params, opt_state, buffers, x, y):
-        if input_frac_bits is not None:
-            x = quantize_fixed_point(x, input_frac_bits)
-        (loss, logits), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, buffers, cfg, x, y)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, loss, _acc(logits, y)
-    return update
-
-
 def _make_eval(cfg: DWNConfig, input_frac_bits: int | None):
-    @jax.jit
-    def evaluate(params, buffers, x, y):
-        if input_frac_bits is not None:
-            x = quantize_fixed_point(x, input_frac_bits)
-        logits = apply_train(params, buffers, cfg, x)
-        return _acc(logits, y)
-    return evaluate
+    """The compiled soft evaluator for (cfg, input_frac_bits) — one
+    compile per process per key (see ``repro.training.evaluator``)."""
+    from ..training.evaluator import cached_evaluator
+    return cached_evaluator(cfg, input_frac_bits)
 
 
 def eval_soft(params, buffers, cfg, x, y, input_frac_bits=None,
               batch: int = 4096) -> float:
+    """Soft (training-path) accuracy, streamed in ``batch`` chunks.
+
+    Same batching and sample-weighted averaging as pre-PR; the evaluator
+    itself is cached, so repeated calls (per-epoch eval, PTQ probes)
+    reuse one XLA executable per (cfg, input_frac_bits).
+    """
     ev = _make_eval(cfg, input_frac_bits)
     accs, ns = [], []
     for i in range(0, x.shape[0], batch):
@@ -71,34 +70,17 @@ def eval_soft(params, buffers, cfg, x, y, input_frac_bits=None,
 def train_dwn(cfg: DWNConfig, data: JSCData, *, epochs: int = 30,
               batch: int = 128, lr: float = 1e-3, seed: int = 0,
               params=None, buffers=None, input_frac_bits: int | None = None,
-              sched: str = "steplr", verbose: bool = True) -> TrainResult:
-    """Train (or fine-tune, if params given) a DWN on JSC data."""
-    key = jax.random.PRNGKey(seed)
-    if params is None:
-        params, buffers = init_dwn(key, cfg, data.x_train)
-    steps_per_epoch = max(1, data.x_train.shape[0] // batch)
-    schedule = (step_lr(lr, 30, 0.1, steps_per_epoch) if sched == "steplr"
-                else constant(lr))
-    # Tables clamp keeps the clipped-STE linear region meaningful.
-    opt = Adam(lr=schedule, clamp=(-1.0, 1.0))
-    opt_state = opt.init(params)
-    update = _make_update(cfg, opt, input_frac_bits)
+              sched: str = "steplr", verbose: bool = True,
+              eval_every: int = 1) -> TrainResult:
+    """Train (or fine-tune, if params given) a DWN on JSC data.
 
-    history = []
-    for epoch in range(epochs):
-        t0 = time.time()
-        losses = []
-        for xb, yb in batches(data.x_train, data.y_train, batch,
-                              seed=seed, epoch=epoch):
-            params, opt_state, loss, acc = update(
-                params, opt_state, buffers, jnp.asarray(xb), jnp.asarray(yb))
-            losses.append(float(loss))
-        te_acc = eval_soft(params, buffers, cfg, data.x_test, data.y_test,
-                           input_frac_bits)
-        history.append({"epoch": epoch, "loss": float(np.mean(losses)),
-                        "test_acc": te_acc, "sec": time.time() - t0})
-        if verbose:
-            print(f"  epoch {epoch:3d} loss={np.mean(losses):.4f} "
-                  f"test_acc={te_acc:.4f} ({time.time()-t0:.1f}s)", flush=True)
-    return TrainResult(params, buffers, cfg, history,
-                       history[-1]["test_acc"] if history else float("nan"))
+    Runs on the scan-compiled engine; ``eval_every=0`` evaluates only
+    after the last epoch and executes the whole run as one device
+    program (the sweep's fast path).  Caller-held ``params``/``buffers``
+    are copied before the engine's donated calls, never invalidated.
+    """
+    from ..training.engine import train_dwn_scan
+    return train_dwn_scan(cfg, data, epochs=epochs, batch=batch, lr=lr,
+                          seed=seed, params=params, buffers=buffers,
+                          input_frac_bits=input_frac_bits, sched=sched,
+                          eval_every=eval_every, verbose=verbose)

@@ -108,9 +108,12 @@ def main(argv=None):
                     help="DWN mode: draw request sizes uniformly in "
                          "[1, batch] instead of a fixed batch")
     ap.add_argument("--backend", default="",
-                    choices=[""] + available_backends(),
+                    choices=["", "auto"] + available_backends(),
                     help="DWN datapath backend (default: the arch's "
-                         "dwn_datapath, else fused-packed)")
+                         "dwn_datapath, else fused-packed; 'auto' "
+                         "calibrates per batch bucket at startup and "
+                         "serves each bucket on the fastest bit-exact "
+                         "backend)")
     ap.add_argument("--no-data-parallel", action="store_true",
                     help="DWN mode: disable shard_map data parallelism")
     ap.add_argument("--model-parallel", type=int, default=1)

@@ -1,15 +1,24 @@
-"""Distributed LM training driver (FSDP+TP via pjit on the host mesh).
+"""Training driver: distributed LM training and scan-compiled DWN training.
 
-This is the *runnable* trainer: it composes the model zoo, sharding
-rules, optimizer, token pipeline, checkpoint/restart supervisor and
-straggler monitor.  On this CPU container it runs reduced configs
+LM archs (FSDP+TP via pjit on the host mesh): composes the model zoo,
+sharding rules, optimizer, token pipeline, checkpoint/restart supervisor
+and straggler monitor.  On this CPU container it runs reduced configs
 end-to-end (tests/examples); on a pod the same driver runs the full
 configs (the dry-run proves every full (arch x shape) cell lowers and
 compiles on the production meshes).
 
+DWN archs (family="dwn", e.g. --arch dwn-jsc-md): the scan-compiled
+trainer from ``repro.training`` — device-resident epochs with donated
+optimizer state; multiple --seeds train as ONE vmapped program
+(``train_dwn_batch``), data-parallel over the host mesh when it has
+devices.  Prints a JSON summary (per-seed soft accuracy, epoch seconds,
+steps/s).
+
 Usage:
     python -m repro.launch.train --arch qwen3-8b --reduced --steps 50 \
         [--batch 8] [--seq 128] [--ckpt-dir /tmp/ckpt] [--model-parallel 2]
+    python -m repro.launch.train --arch dwn-jsc-md --reduced \
+        --epochs 4 --seeds 0,1,2,3 [--batch 128]
 """
 
 from __future__ import annotations
@@ -64,22 +73,93 @@ def build(cfg, mesh, *, lr: float, num_micro: int = 1):
     return init, jstep, (p_shard, o_shard)
 
 
+def dwn_train(cfg, args) -> int:
+    """Scan-compiled DWN training: one device program per epoch block,
+    multi-seed runs vmapped into a single program."""
+    from ..core.model import DWNConfig
+    from ..data.jsc import load_jsc
+    from ..training import ScanTrainer, train_dwn_batch
+
+    n_train = 4000 if args.reduced else 20000
+    data = load_jsc(n_train, max(1000, n_train // 4), seed=args.seed)
+    dcfg = DWNConfig(lut_counts=(cfg.dwn_luts,),
+                     bits_per_feature=cfg.dwn_bits,
+                     encoding=cfg.dwn_encoding)
+    seeds = [int(s) for s in str(args.seeds).split(",") if s != ""]
+    batch = args.batch if args.batch > 0 else 128
+    epochs = args.epochs
+
+    rep = {"arch": cfg.name, "engine": "scan", "epochs": epochs,
+           "batch": batch, "n_train": n_train, "seeds": seeds}
+    if len(seeds) == 1:
+        trainer = ScanTrainer(dcfg, data, batch=batch, lr=args.lr,
+                              seed=seeds[0])
+        res = trainer.train(epochs, eval_every=args.eval_every,
+                            verbose=not args.quiet)
+        secs = [h["sec"] for h in res.history]
+        rep.update({
+            "soft_test_acc": [round(res.soft_test_acc, 4)],
+            "epoch_s": round(float(np.median(secs)), 3) if secs else None,
+            "steps_per_epoch": trainer.steps_per_epoch,
+            "steps_per_s": round(
+                trainer.steps_per_epoch / float(np.median(secs)), 1)
+            if secs else None,
+        })
+    else:
+        out = train_dwn_batch(dcfg, data, epochs=epochs, seeds=seeds,
+                              batch=batch, lr=args.lr)
+        spe = data.x_train.shape[0] // batch
+        rep.update({
+            "soft_test_acc": [round(r.soft_test_acc, 4)
+                              for r in out.results],
+            "vmapped": True,
+            "data_parallel": out.data_parallel,
+            "wall_s": round(out.wall_s, 3),
+            "epoch_s_per_model": round(
+                out.wall_s / max(1, epochs) / len(seeds), 3),
+            "steps_per_epoch": spe,
+        })
+    print(json.dumps(rep))
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="batch size (default: 8 for LM archs, 128 for "
+                         "DWN archs)")
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="learning rate (default: 3e-4 for LM archs, "
+                         "1e-3 for DWN archs, the paper protocol)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--epochs", type=int, default=4,
+                    help="DWN mode: training epochs")
+    ap.add_argument("--seeds", default="0",
+                    help="DWN mode: comma-separated seeds; more than one "
+                         "trains all of them as one vmapped program")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="DWN mode: eval cadence (0 = final only, whole "
+                         "run as one device program)")
+    ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
+    if cfg.family == "dwn":
+        if args.lr is None:
+            args.lr = 1e-3       # DWN paper protocol
+        return dwn_train(cfg, args)
+    if args.lr is None:
+        args.lr = 3e-4
+    if args.batch <= 0:
+        args.batch = 8
     if args.reduced:
         cfg = cfg.reduced()
     mesh = make_host_mesh(args.model_parallel)

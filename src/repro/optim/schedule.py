@@ -18,8 +18,13 @@ def step_lr(base_lr: float, step_size_epochs: int, gamma: float,
     """Paper §III: StepLR(step_size=30, gamma=0.1) on epochs.
 
     lr = base_lr * gamma ** floor(epoch / step_size_epochs).
+
+    ``step`` is the optimizer-step counter (traced array inside jit/scan,
+    or a plain int when probing the schedule from the host, e.g. for
+    logging the epoch-boundary lr in the training history).
     """
     def fn(step):
+        step = jnp.asarray(step)
         epoch = step.astype(jnp.float32) / float(max(1, steps_per_epoch))
         k = jnp.floor(epoch / float(step_size_epochs))
         return jnp.asarray(base_lr, jnp.float32) * (gamma ** k)
@@ -29,7 +34,7 @@ def step_lr(base_lr: float, step_size_epochs: int, gamma: float,
 def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
                   min_ratio: float = 0.1):
     def fn(step):
-        s = step.astype(jnp.float32)
+        s = jnp.asarray(step).astype(jnp.float32)
         warm = s / jnp.maximum(1.0, float(warmup_steps))
         prog = jnp.clip((s - warmup_steps) /
                         jnp.maximum(1.0, float(total_steps - warmup_steps)),

@@ -234,6 +234,78 @@ class BoundBackend:
 
 
 # ---------------------------------------------------------------------------
+# per-(arch, bucket) backend auto-select
+# ---------------------------------------------------------------------------
+
+def time_backend_step(bound: "BoundBackend", x: Array, *,
+                      iters: int = 3) -> float:
+    """Best-of-``iters`` seconds of one bound step at x's bucket size.
+
+    The first (untimed) call warms the (backend, bucket) compile cache,
+    so the measurement sees steady-state serving, exactly like a running
+    server would.
+    """
+    import time
+    fn = bound.step_for(x.shape[0])
+    jax.block_until_ready(fn(x))
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+class AutoSelector:
+    """Per-(arch, bucket) fastest-bit-exact-backend chooser.
+
+    The serving benchmarks show the fastest datapath is *size dependent*
+    (e.g. ``BENCH_serve.json``: on dwn-jsc-sm the float oracle outruns the
+    packed paths, on md/lg the packed paths win).  Instead of hardcoding,
+    the selector times every backend that passed the startup bit-exactness
+    gate (the oracle is exact by definition) on probe rows at each bucket
+    size and serves that bucket on the winner.  Calibration runs once per
+    (arch, bucket): the engine calibrates its whole bucket ladder at
+    startup, so no timed request pays calibration (compiles + timing
+    probes) inside its compute window; ``backend_for`` keeps a lazy
+    fallback for selectors created mid-session via
+    ``use_backend("auto")``.
+
+    Attributes:
+      choice: bucket -> winning backend name (filled by calibration).
+      timings: bucket -> {backend: best step seconds} for reporting.
+    """
+
+    def __init__(self, backends: dict[str, "BoundBackend"],
+                 bit_exact: dict[str, bool], *, iters: int = 3):
+        self.backends = backends
+        self.eligible = [name for name, b in backends.items()
+                         if b.is_oracle or bit_exact.get(name, False)]
+        assert self.eligible, "no bit-exact backend to select from"
+        self.iters = iters
+        self.choice: dict[int, str] = {}
+        self.timings: dict[int, dict[str, float]] = {}
+
+    def calibrate(self, x: Array) -> str:
+        """Time every eligible backend at x's bucket; returns the winner."""
+        bucket = x.shape[0]
+        times = {name: time_backend_step(self.backends[name], x,
+                                         iters=self.iters)
+                 for name in self.eligible}
+        self.timings[bucket] = times
+        self.choice[bucket] = min(times, key=times.get)
+        return self.choice[bucket]
+
+    def backend_for(self, x: Array) -> "BoundBackend":
+        """The calibrated winner for x's bucket (calibrating on first
+        encounter — bounded one calibration per bucket, like compiles)."""
+        bucket = x.shape[0]
+        if bucket not in self.choice:
+            self.calibrate(x)
+        return self.backends[self.choice[bucket]]
+
+
+# ---------------------------------------------------------------------------
 # startup cross-check
 # ---------------------------------------------------------------------------
 
@@ -271,6 +343,7 @@ def verify_backends(model: DWNModelBundle,
 
 
 __all__ = [
-    "Backend", "BoundBackend", "DWNModelBundle", "available_backends",
-    "build_dwn_model", "get_backend", "register_backend", "verify_backends",
+    "AutoSelector", "Backend", "BoundBackend", "DWNModelBundle",
+    "available_backends", "build_dwn_model", "get_backend",
+    "register_backend", "time_backend_step", "verify_backends",
 ]

@@ -35,8 +35,9 @@ from ..configs.base import ArchConfig
 from ..models import api
 from ..sharding.partition import Partitioner
 from ..launch.mesh import make_data_mesh, make_host_mesh
-from .backends import (BoundBackend, DWNModelBundle, available_backends,
-                       build_dwn_model, get_backend, verify_backends)
+from .backends import (AutoSelector, BoundBackend, DWNModelBundle,
+                       available_backends, build_dwn_model, get_backend,
+                       verify_backends)
 from .scheduler import MicrobatchScheduler, Request, latency_stats
 
 
@@ -47,7 +48,10 @@ class ServingEngine:
       arch: arch name or ``ArchConfig``; ``family`` selects the path.
       backend: DWN datapath backend name.  ``None`` resolves from the
         arch's ``dwn_datapath`` field when that names a registered
-        backend, else ``"fused-packed"``.
+        backend, else ``"fused-packed"``.  ``"auto"`` calibrates every
+        bit-exact backend per batch bucket at startup and serves each
+        bucket on the fastest (see ``backends.AutoSelector``); explicit
+        names remain the override.
       max_bucket / min_bucket: the power-of-two batch-bucket ladder.
       data_parallel: shard DWN buckets over the ("data",) host mesh with
         ``shard_map`` (buckets not divisible by the device count fall back
@@ -107,14 +111,28 @@ class ServingEngine:
             backend = (cfg.dwn_datapath
                        if cfg.dwn_datapath in self.backends
                        else "fused-packed")
-        self.backend = self.backends[backend]
-        if verify:
+        self.auto: AutoSelector | None = None
+        probe = self.data.x_test[:self.scheduler.max_bucket]
+        if verify or backend == "auto":
             # probe at the largest bucket: the multi-block grid path that
             # serving actually uses is the one cross-checked, and the
-            # probe's compile is the one the serve loop reuses
-            probe = self.data.x_test[:self.scheduler.max_bucket]
+            # probe's compile is the one the serve loop reuses.  Auto
+            # selection always verifies: it only picks among bit-exact
+            # datapaths.
             self.bit_exact = verify_backends(
                 self.model, list(self.backends.values()), probe)
+        if backend == "auto":
+            # calibrate the whole bucket ladder at startup so no timed
+            # request ever pays calibration (compiles + timing probes)
+            # inside its compute window; the per-bucket compiles are the
+            # same ones a ragged stream would pay lazily anyway
+            self.auto = AutoSelector(self.backends, self.bit_exact)
+            for bucket in self.scheduler.buckets:
+                self.auto.calibrate(jnp.asarray(probe[:bucket]))
+            self.backend = self.backends[
+                self.auto.choice[self.scheduler.max_bucket]]
+        else:
+            self.backend = self.backends[backend]
 
     def _shard_wrap(self, fn, bucket: int):
         """shard_map a backend step over the ("data",) mesh for one bucket.
@@ -134,8 +152,19 @@ class ServingEngine:
                          check_rep=False)
 
     def use_backend(self, name: str) -> None:
-        """Switch the active DWN datapath (compile caches are kept)."""
+        """Switch the active DWN datapath (compile caches are kept).
+
+        ``"auto"`` switches to per-bucket auto-selection among the
+        bit-exact backends (requires the startup verification to have
+        run); any registered backend name pins that datapath.
+        """
         assert self.family == "dwn"
+        if name == "auto":
+            if self.auto is None:
+                assert self.bit_exact, "auto-select needs verify=True"
+                self.auto = AutoSelector(self.backends, self.bit_exact)
+            return
+        self.auto = None
         self.backend = self.backends[name]
 
     def warmup(self, size: int | None = None) -> None:
@@ -157,8 +186,10 @@ class ServingEngine:
         self._dwn_step(np.asarray(self.data.x_test[:bucket]))
 
     def _dwn_step(self, x: np.ndarray):
-        fn = self.backend.step_for(x.shape[0])
-        counts, pred = fn(jnp.asarray(x))
+        xd = jnp.asarray(x)
+        backend = (self.auto.backend_for(xd) if self.auto is not None
+                   else self.backend)
+        counts, pred = backend.step_for(x.shape[0])(xd)
         pred.block_until_ready()             # compute timing is this call
         return np.asarray(counts), np.asarray(pred)
 
@@ -305,7 +336,8 @@ class ServingEngine:
         if self.family == "dwn":
             out.update({
                 "mode": "dwn-classify",
-                "datapath": self.backend.name,
+                "datapath": ("auto" if self.auto is not None
+                             else self.backend.name),
                 "backends": available_backends(),
                 "bit_exact_vs_oracle": self.bit_exact,
                 "buckets": list(self.scheduler.buckets),
@@ -315,6 +347,14 @@ class ServingEngine:
                 "luts": self.cfg.dwn_luts,
                 "bits_per_feature": self.cfg.dwn_bits,
             })
+            if self.auto is not None:
+                out["auto"] = {
+                    "choice": dict(self.auto.choice),
+                    "timings_ms": {b: {n: round(t * 1e3, 3)
+                                       for n, t in times.items()}
+                                   for b, times in
+                                   self.auto.timings.items()},
+                }
         else:
             out.update({
                 "mode": "lm-generate",

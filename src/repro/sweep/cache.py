@@ -22,13 +22,24 @@ from pathlib import Path
 
 
 def _code_fingerprint() -> str:
-    """Hash of the source files whose edits change sweep numbers."""
+    """Hash of the source files whose edits change sweep numbers.
+
+    Includes the trainer stack (core/training, core/lut_layer, optim/adam,
+    and the scan engine + batch trainer): cached accuracies were produced
+    by those semantics, so editing them must invalidate, not silently
+    serve, old entries.
+    """
     import repro.core.model as m1
     import repro.core.thermometer as m2
     import repro.hw.cost as m3
     from . import pipeline as m4
+    import repro.core.training as m5
+    import repro.core.lut_layer as m6
+    import repro.optim.adam as m7
+    import repro.training.engine as m8
+    import repro.training.batch as m9
     h = hashlib.sha256()
-    for mod in (m1, m2, m3, m4):
+    for mod in (m1, m2, m3, m4, m5, m6, m7, m8, m9):
         try:
             with open(mod.__file__, "rb") as fh:
                 h.update(fh.read())

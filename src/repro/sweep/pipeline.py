@@ -5,7 +5,9 @@ For each :class:`~repro.sweep.grid.SweepPoint` the runner
 1. instantiates the model config (`core.model.DWNConfig` with the point's
    LUT-layer width, encoder resolution T, and threshold placement) and
    builds/trains it once per unique (preset, T, placement) — TEN and PEN
-   variants of the same model share weights, as in the paper;
+   variants of the same model share weights, as in the paper.  Points that
+   agree on (preset, T) train together as ONE vmapped scan-compiled
+   program (``repro.training.batch``) instead of sequential loops;
 2. computes **hard-inference accuracy** through ``apply_hard_packed``
    (the packed uint32 datapath, bit-exact vs the float oracle);
 3. scores **FPGA cost** via ``hw.cost.dwn_hw_report`` — the full
@@ -96,27 +98,78 @@ class SweepRunner:
 
     # -- model / frozen ------------------------------------------------
 
+    @staticmethod
+    def _cfg_for(point: SweepPoint) -> DWNConfig:
+        return dataclasses.replace(JSC_PRESETS[point.preset],
+                                   bits_per_feature=point.bits,
+                                   encoding=point.placement)
+
+    def _init_model(self, cfg: DWNConfig):
+        s = self.settings
+        if s.warmstart:
+            return warmstart_dwn(jax.random.PRNGKey(s.seed), cfg,
+                                 self.data.x_train, self.data.y_train)
+        return init_dwn(jax.random.PRNGKey(s.seed), cfg, self.data.x_train)
+
+    def prepare_models(self, points) -> int:
+        """Batch-train the models several grid points share, ahead of the
+        per-point loop.
+
+        Points group by (preset, T): members differ only in threshold
+        placement, so their params/buffers are same-shape arrays and a
+        whole group trains as ONE vmapped scan-compiled program
+        (``repro.training.batch.train_dwn_batch``) instead of sequential
+        loops.  Groups of one fall through to :meth:`model_for`.
+
+        Determinism caveat: a point's group is the set of *uncached*
+        points sharing its (preset, T), so in principle vmap-level fp
+        drift could vary with which grid subset runs together.  In
+        practice the parity tests pin batched == sequential trajectories
+        bit-exactly on this backend, and any residual drift is in the
+        ~1e-6 class the sweep's accuracy tolerances already absorb.
+
+        Returns the number of models trained in batched calls.
+        """
+        s = self.settings
+        if s.train_epochs <= 0:
+            return 0
+        groups: dict[tuple, list] = {}
+        for pt in points:
+            key = (pt.preset, pt.bits, pt.placement)
+            if key in self._models:
+                continue
+            grp = groups.setdefault((pt.preset, pt.bits), [])
+            if key not in [k for k, _ in grp]:
+                grp.append((key, pt))
+        from ..training import train_dwn_batch
+        trained = 0
+        for members in groups.values():
+            if len(members) < 2:
+                continue
+            cfgs = [self._cfg_for(pt) for _, pt in members]
+            models = [self._init_model(c) for c in cfgs]
+            out = train_dwn_batch(
+                cfgs[0], self.data, epochs=s.train_epochs,
+                seeds=[s.seed] * len(members), models=models,
+                batch=s.train_batch, lr=s.lr, eval_final=False)
+            for (key, _), cfg, res in zip(members, cfgs, out.results):
+                self._models[key] = (cfg, res.params, res.buffers)
+                trained += 1
+        return trained
+
     def model_for(self, point: SweepPoint):
         """(DWNConfig, params, buffers) for the point's model shape —
         built once per unique (preset, T, placement)."""
         key = (point.preset, point.bits, point.placement)
         if key not in self._models:
             s = self.settings
-            cfg = dataclasses.replace(JSC_PRESETS[point.preset],
-                                      bits_per_feature=point.bits,
-                                      encoding=point.placement)
-            if s.warmstart:
-                params, buffers = warmstart_dwn(
-                    jax.random.PRNGKey(s.seed), cfg,
-                    self.data.x_train, self.data.y_train)
-            else:
-                params, buffers = init_dwn(jax.random.PRNGKey(s.seed), cfg,
-                                           self.data.x_train)
+            cfg = self._cfg_for(point)
+            params, buffers = self._init_model(cfg)
             if s.train_epochs > 0:
                 res = train_dwn(cfg, self.data, epochs=s.train_epochs,
                                 batch=s.train_batch, lr=s.lr, seed=s.seed,
                                 params=params, buffers=buffers,
-                                verbose=False)
+                                eval_every=0, verbose=False)
                 params, buffers = res.params, res.buffers
             self._models[key] = (cfg, params, buffers)
         return self._models[key]
@@ -226,28 +279,37 @@ def run_grid(grid: str | list, settings: SweepSettings | None = None, *,
     name = grid if isinstance(grid, str) else "custom"
     cache = SweepCache(cache_dir)
     runner: SweepRunner | None = None
-    out = []
+    hits: dict[int, PointResult] = {}
     for i, point in enumerate(points):
-        key = point_key(point, settings)
-        hit = None if fresh else cache.get(key)
-        res = None
+        hit = None if fresh else cache.get(point_key(point, settings))
         if hit is not None:
             try:
                 res = PointResult.from_dict(hit)
                 res.cached = True
+                hits[i] = res
             except (TypeError, KeyError):      # stale schema: recompute
-                res = None
+                pass
+    misses = [p for i, p in enumerate(points) if i not in hits]
+    if misses:                                 # lazy: all-hit runs are free
+        runner = SweepRunner(settings)
+        # train shape-compatible models of the uncached points as one
+        # vmapped program each, before the per-point measurement loop
+        n_batched = runner.prepare_models(misses)
+        if log and n_batched:
+            log(f"batch-trained {n_batched} models "
+                f"({settings.train_epochs} epochs, one program per group)")
+    out = []
+    for i, point in enumerate(points):
+        res = hits.get(i)
         if res is None:
-            if runner is None:                     # lazy: all-hit runs are free
-                runner = SweepRunner(settings)
             t0 = time.perf_counter()
             res = runner.run_point(point)
-            cache.put(key, res.to_dict())
+            cache.put(point_key(point, settings), res.to_dict())
             if log:
                 log(f"[{i + 1}/{len(points)}] {point.label}: "
                     f"{res.total_luts} LUTs "
                     f"({time.perf_counter() - t0:.1f}s)")
-        if log and res.cached:
+        elif log:
             log(f"[{i + 1}/{len(points)}] {point.label}: cached")
         out.append(res)
     return SweepResult(grid=name, settings=dataclasses.asdict(settings),

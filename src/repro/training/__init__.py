@@ -1,0 +1,32 @@
+"""Scan-compiled DWN training engine.
+
+The paper-protocol trainer as a single device program per epoch:
+
+* ``engine``    — :class:`ScanTrainer` / :func:`train_dwn_scan`: on-device
+  ``lax.scan`` over minibatches with donated params/optimizer state, the
+  StepLR schedule folded into the optimizer-step counter, metrics
+  accumulated in-carry and fetched once per epoch.
+* ``batch``     — :func:`train_dwn_batch`: vmapped multi-seed / multi-point
+  training (one compiled program trains a whole stack of same-shape
+  models), sharded data-parallel over the host mesh when it has devices.
+* ``evaluator`` — the process-wide compiled-evaluator cache shared by
+  ``core.training.eval_soft``, the sweep pipeline and the PTQ/FT search.
+* ``reference`` — the frozen pre-PR python-per-minibatch loop, kept
+  verbatim as the parity oracle and the ``benchmarks/train_bench.py``
+  baseline.
+
+``repro.core.training.train_dwn`` delegates here: the scan engine *is*
+the paper-protocol trainer (same batch order, same schedule step count,
+loss trajectory equal within fp tolerance), not a fork of it.
+"""
+
+from .engine import ScanTrainer, train_dwn_scan, encode_dataset
+from .batch import train_dwn_batch
+from .evaluator import cached_evaluator, evaluator_cache_info
+from .reference import ReferenceTrainer, train_dwn_reference
+
+__all__ = [
+    "ScanTrainer", "train_dwn_scan", "encode_dataset", "train_dwn_batch",
+    "cached_evaluator", "evaluator_cache_info", "ReferenceTrainer",
+    "train_dwn_reference",
+]

@@ -1,0 +1,49 @@
+"""Process-wide cache of compiled DWN evaluators.
+
+Pre-PR, ``core.training._make_eval`` built a fresh ``@jax.jit`` closure on
+every call — one XLA retrace + recompile per epoch per training run, and
+again for every PTQ/FT probe and sweep point.  The evaluator graph depends
+only on ``(cfg, input_frac_bits)`` (shapes retrace inside one jit wrapper
+for free), so one compiled callable per such pair serves every caller:
+``core.training.eval_soft``, the scan engine's per-epoch eval, the sweep
+pipeline, and the fine-tune bit-width search.
+
+``DWNConfig`` is a frozen dataclass of hashables, so it is the cache key
+directly.  The cache is intentionally unbounded: a process sees a handful
+of distinct configs (a sweep grid is the worst case, ~dozens).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ..core.classifier import accuracy as _acc
+from ..core.model import DWNConfig, apply_train
+from ..core.thermometer import quantize_fixed_point
+
+
+@functools.lru_cache(maxsize=None)
+def cached_evaluator(cfg: DWNConfig, input_frac_bits: int | None):
+    """The jitted soft-accuracy evaluator for ``(cfg, input_frac_bits)``.
+
+    Returns ``evaluate(params, buffers, x, y) -> scalar accuracy``; the
+    same compiled callable is returned on every call with equal keys, so
+    per-epoch eval costs one execution, not one compile.
+    """
+    @jax.jit
+    def evaluate(params, buffers, x, y):
+        if input_frac_bits is not None:
+            x = quantize_fixed_point(x, input_frac_bits)
+        logits = apply_train(params, buffers, cfg, x)
+        return _acc(logits, y)
+    return evaluate
+
+
+def evaluator_cache_info():
+    """lru_cache statistics — lets tests pin the no-recompile guarantee."""
+    return cached_evaluator.cache_info()
+
+
+__all__ = ["cached_evaluator", "evaluator_cache_info"]

@@ -1,0 +1,257 @@
+"""The pre-PR python-per-minibatch trainer, frozen verbatim.
+
+This module preserves the exact pre-scan-engine training path — including
+its cost structure — as (a) the parity oracle the scan engine is tested
+against and (b) the baseline ``benchmarks/train_bench.py`` measures the
+speedup over.  Deliberately kept, not deleted, characteristics:
+
+* one jitted update call per minibatch, ``float(loss)`` host sync per step;
+* thermometer re-encode of every batch inside the update;
+* ``jnp.argmax`` (variadic-reduce) mapping selection and the textbook
+  two-einsum softmax-STE backward (the x_soft form);
+* a **fresh** ``@jax.jit`` eval closure per epoch (the recompile the
+  evaluator cache fixes).
+
+Do not "improve" this file — its whole value is staying byte-for-byte
+faithful to the pre-PR semantics *and* performance profile.  The live
+ops in ``core.lut_layer`` compute the same math reassociated; the parity
+tests pin the two trajectories together at fixed seed.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.classifier import (accuracy as _acc, cross_entropy,
+                               group_popcount, logits_from_counts)
+from ..core.model import DWNConfig, init_dwn
+from ..core.thermometer import encode, quantize_fixed_point
+from ..data.jsc import JSCData, batches
+from ..optim.adam import Adam, AdamState
+from ..optim.schedule import step_lr, constant
+
+Array = jax.Array
+
+
+def _adam_update_ref(opt: Adam, grads, state: AdamState, params):
+    """Pre-PR Adam step: three separate tree traversals (mu, nu, then the
+    parameter update reading the materialized mhat/vhat) — numerically
+    identical to the fused one-pass ``Adam.update``, kept verbatim for
+    its pre-PR memory-pass structure."""
+    step = state.step + 1
+    b1, b2 = opt.b1, opt.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                      state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    lr = opt._lr(step)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        new = p - lr * (mhat / (jnp.sqrt(vhat) + opt.eps)
+                        + opt.weight_decay * p)
+        if opt.clamp is not None:
+            new = jnp.clip(new, opt.clamp[0], opt.clamp[1])
+        return new
+
+    return jax.tree.map(upd, params, mu, nu), AdamState(step, mu, nu)
+
+
+# -- pre-PR LUT-layer ops (old formulations, local copies) ----------------
+
+@jax.custom_vjp
+def _select_bits_ref(bits: Array, scores: Array) -> Array:
+    idx = jnp.argmax(scores, axis=-1)                        # (m, n)
+    return jnp.take(bits, idx.reshape(-1), axis=1).reshape(
+        bits.shape[0], *idx.shape)
+
+
+def _select_bits_ref_fwd(bits, scores):
+    return _select_bits_ref(bits, scores), (bits, scores)
+
+
+def _select_bits_ref_bwd(res, g):
+    bits, scores = res
+    p = jax.nn.softmax(scores, axis=-1)                      # (m, n, C)
+    d_bits = jnp.einsum("bmn,mnc->bc", g, p)
+    x_soft = jnp.einsum("mnc,bc->bmn", p, bits)
+    gb = jnp.einsum("bmn,bc->mnc", g, bits)
+    gx = jnp.einsum("bmn,bmn->mn", g, x_soft)
+    d_scores = p * (gb - gx[..., None])
+    return d_bits, d_scores
+
+
+_select_bits_ref.defvjp(_select_bits_ref_fwd, _select_bits_ref_bwd)
+
+
+def _addresses_ref(sel_bits: Array, fan_in: int) -> Array:
+    weights = (2 ** jnp.arange(fan_in, dtype=jnp.int32))
+    return jnp.sum(sel_bits.astype(jnp.int32) * weights, axis=-1)
+
+
+def _gather_tables_ref(tables: Array, addr: Array) -> Array:
+    return jnp.take_along_axis(
+        jnp.broadcast_to(tables[None], (addr.shape[0],) + tables.shape),
+        addr[..., None], axis=-1)[..., 0]
+
+
+def _gather_tables_multi_ref(tables: Array, addr: Array) -> Array:
+    B = addr.shape[0]
+    t = jnp.broadcast_to(tables[None], (B,) + tables.shape)
+    return jnp.take_along_axis(t, addr, axis=-1)
+
+
+@jax.custom_vjp
+def _lut_lookup_ref(sel_bits: Array, tables: Array) -> Array:
+    addr = _addresses_ref(sel_bits, sel_bits.shape[-1])
+    return (_gather_tables_ref(tables, addr) > 0.0).astype(jnp.float32)
+
+
+def _lut_lookup_ref_fwd(sel_bits, tables):
+    addr = _addresses_ref(sel_bits, sel_bits.shape[-1])
+    out = (_gather_tables_ref(tables, addr) > 0.0).astype(jnp.float32)
+    return out, (sel_bits, tables, addr)
+
+
+def _lut_lookup_ref_bwd(res, g):
+    sel_bits, tables, addr = res
+    n = sel_bits.shape[-1]
+    S = tables.shape[-1]
+    vals = _gather_tables_ref(tables, addr)                  # re-gathered
+    g_vals = g * (jnp.abs(vals) <= 1.0).astype(g.dtype)
+    onehot = jax.nn.one_hot(addr, S, dtype=g.dtype)
+    d_tables = jnp.einsum("bm,bms->ms", g_vals, onehot)
+    bit_w = (2 ** jnp.arange(n, dtype=jnp.int32))
+    addr_hi = addr[..., None] | bit_w
+    addr_lo = addr[..., None] & (~bit_w)
+    t_hi = _gather_tables_multi_ref(tables, addr_hi)
+    t_lo = _gather_tables_multi_ref(tables, addr_lo)
+    d_sel = g_vals[..., None] * (t_hi - t_lo)
+    return d_sel, d_tables
+
+
+_lut_lookup_ref.defvjp(_lut_lookup_ref_fwd, _lut_lookup_ref_bwd)
+
+
+def apply_train_ref(params, buffers, cfg: DWNConfig, x: Array) -> Array:
+    """Pre-PR differentiable forward (per-batch encode, old ops)."""
+    bits = encode(x, buffers["thresholds"])
+    bits = jax.lax.stop_gradient(bits)
+    for layer in params["layers"]:
+        sel = _select_bits_ref(bits, layer["scores"])
+        bits = _lut_lookup_ref(sel, layer["tables"])
+    counts = group_popcount(bits, cfg.num_classes)
+    return logits_from_counts(counts, cfg.tau_value)
+
+
+def _loss_ref(params, buffers, cfg, x, y):
+    logits = apply_train_ref(params, buffers, cfg, x)
+    return cross_entropy(logits, y), logits
+
+
+def _make_update_ref(cfg: DWNConfig, opt: Adam, input_frac_bits):
+    @jax.jit
+    def update(params, opt_state, buffers, x, y):
+        if input_frac_bits is not None:
+            x = quantize_fixed_point(x, input_frac_bits)
+        (loss, logits), grads = jax.value_and_grad(
+            _loss_ref, has_aux=True)(params, buffers, cfg, x, y)
+        params, opt_state = _adam_update_ref(opt, grads, opt_state, params)
+        return params, opt_state, loss, _acc(logits, y)
+    return update
+
+
+def eval_soft_ref(params, buffers, cfg, x, y, input_frac_bits=None,
+                  batch: int = 4096) -> float:
+    """Pre-PR eval: a fresh jit closure per call (the recompile bug)."""
+    @jax.jit
+    def evaluate(params, buffers, xb, yb):
+        if input_frac_bits is not None:
+            xb = quantize_fixed_point(xb, input_frac_bits)
+        logits = apply_train_ref(params, buffers, cfg, xb)
+        return _acc(logits, yb)
+    accs, ns = [], []
+    for i in range(0, x.shape[0], batch):
+        xb, yb = jnp.asarray(x[i:i + batch]), jnp.asarray(y[i:i + batch])
+        accs.append(float(evaluate(params, buffers, xb, yb)))
+        ns.append(xb.shape[0])
+    return float(np.average(accs, weights=ns))
+
+
+class ReferenceTrainer:
+    """Resumable wrapper over the pre-PR loop (epoch-at-a-time), so the
+    benchmark can interleave reference and scan epochs under identical
+    machine conditions."""
+
+    def __init__(self, cfg: DWNConfig, data: JSCData, *, batch: int = 128,
+                 lr: float = 1e-3, sched: str = "steplr", seed: int = 0,
+                 params=None, buffers=None,
+                 input_frac_bits: int | None = None):
+        self.cfg, self.data = cfg, data
+        self.batch, self.seed = batch, seed
+        self.input_frac_bits = input_frac_bits
+        if params is None:
+            params, buffers = init_dwn(jax.random.PRNGKey(seed), cfg,
+                                       data.x_train)
+        self.params, self.buffers = params, buffers
+        steps = max(1, data.x_train.shape[0] // batch)
+        schedule = (step_lr(lr, 30, 0.1, steps) if sched == "steplr"
+                    else constant(lr))
+        opt = Adam(lr=schedule, clamp=(-1.0, 1.0))
+        self.opt_state = opt.init(params)
+        self._update = _make_update_ref(cfg, opt, input_frac_bits)
+        self.epoch = 0
+
+    def run_epoch(self) -> list:
+        """One pre-PR epoch: per-step jit dispatch + float(loss) sync."""
+        losses = []
+        for xb, yb in batches(self.data.x_train, self.data.y_train,
+                              self.batch, seed=self.seed, epoch=self.epoch):
+            self.params, self.opt_state, loss, _ = self._update(
+                self.params, self.opt_state, self.buffers,
+                jnp.asarray(xb), jnp.asarray(yb))
+            losses.append(float(loss))
+        self.epoch += 1
+        return losses
+
+    def evaluate(self) -> float:
+        """Pre-PR eval (fresh jit per call, by design)."""
+        return eval_soft_ref(self.params, self.buffers, self.cfg,
+                             self.data.x_test, self.data.y_test,
+                             self.input_frac_bits)
+
+
+def train_dwn_reference(cfg: DWNConfig, data: JSCData, *, epochs: int = 30,
+                        batch: int = 128, lr: float = 1e-3, seed: int = 0,
+                        params=None, buffers=None,
+                        input_frac_bits: int | None = None,
+                        sched: str = "steplr", verbose: bool = False):
+    """The pre-PR ``train_dwn``, end to end (loop + per-epoch fresh-jit
+    eval), returning the same ``TrainResult`` shape."""
+    from ..core.training import TrainResult
+    t = ReferenceTrainer(cfg, data, batch=batch, lr=lr, sched=sched,
+                         seed=seed, params=params, buffers=buffers,
+                         input_frac_bits=input_frac_bits)
+    history = []
+    for epoch in range(epochs):
+        t0 = time.time()
+        losses = t.run_epoch()
+        te_acc = t.evaluate()
+        history.append({"epoch": epoch, "loss": float(np.mean(losses)),
+                        "test_acc": te_acc, "sec": time.time() - t0})
+        if verbose:
+            print(f"  epoch {epoch:3d} loss={np.mean(losses):.4f} "
+                  f"test_acc={te_acc:.4f} ({time.time()-t0:.1f}s)",
+                  flush=True)
+    return TrainResult(t.params, t.buffers, cfg, history,
+                       history[-1]["test_acc"] if history else float("nan"))
+
+
+__all__ = ["ReferenceTrainer", "train_dwn_reference", "eval_soft_ref",
+           "apply_train_ref"]

@@ -142,6 +142,40 @@ def test_backend_registry_and_config_selection():
     assert eng.backend.name == "float-oracle"
 
 
+def test_backend_auto_select_calibrates_and_serves():
+    """backend="auto": startup calibration times every bit-exact backend
+    at every ladder bucket and serves each bucket on the fastest — no
+    timed request pays calibration inside its compute window."""
+    eng = ServingEngine("dwn-jsc-sm", max_bucket=32, min_bucket=8,
+                        n_train=800, backend="auto")
+    assert eng.auto is not None
+    # startup calibration covered the whole ladder with every eligible
+    # backend (all registered ones passed the bit-exactness gate)
+    assert sorted(eng.auto.choice) == sorted(eng.scheduler.buckets)
+    assert sorted(eng.auto.timings[32]) == sorted(available_backends())
+    assert eng.auto.choice[32] == min(eng.auto.timings[32],
+                                      key=eng.auto.timings[32].get)
+    for n in (32, 5, 17, 32):
+        eng.submit(eng.make_request(n, seed=n))
+    done = eng.drain()
+    assert sum(r.size for r in done) == 32 + 5 + 17 + 32
+    # every bucket that served got exactly one calibration entry
+    assert set(eng.auto.choice) <= set(eng.scheduler.buckets)
+    # results stay bit-exact regardless of which backend won
+    oracle = eng.backends["float-oracle"]
+    for r in done:
+        counts, pred = (np.asarray(a) for a in
+                        oracle.step_for(r.payload.shape[0])(r.payload))
+        np.testing.assert_array_equal(np.asarray(r.result[0]), counts)
+        np.testing.assert_array_equal(np.asarray(r.result[1]), pred)
+    rep = eng.report()
+    assert rep["datapath"] == "auto"
+    assert rep["auto"]["choice"]
+    # explicit --backend remains the override path
+    eng.use_backend("packed-xla")
+    assert eng.auto is None and eng.backend.name == "packed-xla"
+
+
 # ---------------------------------------------------------------------------
 # engine: ragged stream, compile bound, report
 # ---------------------------------------------------------------------------
