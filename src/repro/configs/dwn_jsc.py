@@ -73,8 +73,8 @@ register(_dc.replace(_BASE, name="dwn-jsc-lg2400-opt4",
 
 
 # --- encoding design-space axis (repro.sweep) ------------------------------
-# Encoder resolution (dwn_bits = T) and threshold placement (dwn_encoding)
-# are first-class swept parameters: ``sweep_arch`` derives a servable
+# Encoder resolution (T) and threshold placement are first-class fields of
+# ``repro.dwn.DWNSpec``; ``DWNSpec(...).arch_config()`` derives a servable
 # ArchConfig for any {preset tier} x {T} x {placement} grid point, so the
 # sweep's throughput axis runs the *same* serving engine + backends as
 # production, not a side copy of the datapath.
@@ -86,22 +86,22 @@ SWEEP_TIERS = {"sm-10": 10, "sm-50": 50, "md-360": 360, "lg-2400": 2400}
 def sweep_arch(preset: str, *, bits: int = 200,
                placement: str = "distributive",
                datapath: str = "fused-packed") -> ArchConfig:
-    """Derive the ArchConfig for one encoding-sweep grid point.
+    """Deprecated shim: the ArchConfig of one encoding-sweep grid point.
 
-    Args:
-      preset: JSC tier name ("sm-10" | "sm-50" | "md-360" | "lg-2400").
-      bits: thermometer bits per feature T (encoder resolution).
-      placement: threshold placement ("distributive"|"uniform"|"gaussian").
-      datapath: serving backend name the point should be timed on.
-
-    Returns an unregistered ArchConfig (grid points are transient — the
-    ServingEngine accepts the instance directly, keeping the registry to
-    durable names only).
+    The typed route is ``repro.dwn.DWNSpec(preset=..., bits=...,
+    placement=..., datapath=...).arch_config()`` — this shim delegates
+    there (same dwn_* field values) and warns.
     """
-    luts = SWEEP_TIERS[preset]
-    return _dc.replace(
-        _dwn(f"sweep-{preset}-T{bits}-{placement}", luts, fused=True),
-        dwn_bits=bits, dwn_encoding=placement, dwn_datapath=datapath)
+    import warnings
+    warnings.warn(
+        "configs.dwn_jsc.sweep_arch is deprecated; construct a "
+        "repro.dwn.DWNSpec and use spec.arch_config() (the sweep "
+        "pipeline passes DWNArtifacts to the ServingEngine directly)",
+        DeprecationWarning, stacklevel=2)
+    from ..dwn.spec import DWNSpec
+    spec = DWNSpec(preset=preset, bits=bits, placement=placement,
+                   datapath=datapath)
+    return spec.arch_config(name=f"sweep-{preset}-T{bits}-{placement}-fused")
 
 
 # Durable placement variants of the serving aliases, so the placement axis
@@ -110,3 +110,21 @@ for _pl in ("uniform", "gaussian"):
     register(_dc.replace(_dwn("dwn-jsc-sm-x", 50, fused=True),
                          name=f"dwn-jsc-sm-{_pl}", dwn_encoding=_pl,
                          dwn_datapath="fused-packed"))
+
+
+# --- spec presets (repro.dwn) ----------------------------------------------
+# The serving aliases double as *registered DWNSpec presets*: CLIs and the
+# ServingEngine resolve ``--arch dwn-jsc-sm`` to a typed spec here instead
+# of parsing arch-name suffixes.  Registration is deferred kwargs (specs
+# validate against the serving-backend registry, which config loading must
+# not import).
+from ..dwn.spec import register_preset as _register_spec
+
+for _tier, _preset in (("sm", "sm-50"), ("md", "md-360"), ("lg", "lg-2400")):
+    _register_spec(f"dwn-jsc-{_tier}", preset=_preset,
+                   datapath="fused-packed")
+    _register_spec(f"dwn-jsc-{_tier}-xla", preset=_preset,
+                   datapath="packed-xla")
+for _pl in ("uniform", "gaussian"):
+    _register_spec(f"dwn-jsc-sm-{_pl}", preset="sm-50", placement=_pl,
+                   datapath="fused-packed")

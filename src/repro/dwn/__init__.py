@@ -1,0 +1,29 @@
+"""Unified DWN artifact API: typed ``DWNSpec`` → ``DWNArtifact`` lifecycle.
+
+This package is the single construction path for DWN models.  A
+:class:`DWNSpec` (preset tier, TEN/PEN, thermometer bits T, threshold
+placement, PEN input width, serving datapath, popcount grouping —
+validated at construction) flows through a :class:`DWNArtifact`'s
+explicit stage methods::
+
+    spec = DWNSpec(preset="sm-50", variant="PEN", input_bits=9)
+    art = DWNArtifact(spec).train(data, epochs=4).freeze().pack()
+    engine = ServingEngine(art)           # serve the packed datapath
+    report = art.hw_report()              # FPGA LUT/FF/fmax breakdown
+    art.save("ckpt/")                     # atomic, spec-embedded
+
+Every consumer — serving backends, the sweep pipeline, the launch CLIs,
+the hw cost model / Verilog emitter — delegates here; the old scattered
+glue (``build_dwn_model``, ``sweep_arch``, arch-name suffix parsing)
+survives only as deprecated shims.
+"""
+
+from .artifact import DWNArtifact, LifecycleError, PackedOperands, STAGES
+from .spec import (DWNSpec, GROUPINGS, TIERS, VARIANTS, get_spec, has_spec,
+                   register_preset, resolve_spec, spec_presets)
+
+__all__ = [
+    "DWNArtifact", "DWNSpec", "GROUPINGS", "LifecycleError",
+    "PackedOperands", "STAGES", "TIERS", "VARIANTS", "get_spec",
+    "has_spec", "register_preset", "resolve_spec", "spec_presets",
+]

@@ -1,0 +1,266 @@
+"""DWNArtifact: the full spec → serve / hw-report lifecycle in one object.
+
+An artifact owns every stage of a DWN build and enforces their order::
+
+    spec ──fit/train/adopt──▶ trained ──freeze()──▶ frozen ──pack()──▶ packed
+                                                      │                  │
+                                                hw_report()       serving_model()
+                                                verilog()         (DWNModelBundle)
+
+* **trained** — ``params`` (LUT scores/tables) + ``buffers`` (thermometer
+  thresholds fit on training features).  ``fit`` initializes without
+  gradient epochs (enough for the hardware axes); ``train`` runs the
+  scan-compiled paper-protocol trainer; ``adopt`` accepts externally
+  trained state (the sweep's vmapped batch trainer).
+* **frozen** — hardware semantics (``core.model.FrozenDWN``): int32
+  wires, {0,1} tables, thresholds quantized to the spec's (1, n) grid
+  for PEN.
+* **packed** — the frozen operands staged on device as the packed-uint32
+  serving datapath expects them.
+
+``save``/``load`` ride on ``repro.runtime.checkpoint`` (atomic commit,
+sha256-verified shards) with the spec embedded in the manifest, so a
+reloaded artifact reproduces bit-exact packed serving outputs.
+
+Calling a stage method out of order raises :class:`LifecycleError` with
+the method to call first; re-running an earlier stage (e.g. ``adopt``
+after ``freeze``) invalidates the later stages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.model import DWNConfig, FrozenDWN
+from ..core.model import freeze as freeze_dwn
+from ..core.model import init_dwn
+from .spec import DWNSpec
+
+Array = jax.Array
+
+#: lifecycle stages in order.
+STAGES = ("spec", "trained", "frozen", "packed")
+
+
+class LifecycleError(RuntimeError):
+    """A stage method was called before its prerequisite stage."""
+
+
+@dataclasses.dataclass
+class PackedOperands:
+    """Frozen operands staged on device for the packed serving datapath:
+    thresholds (F, T) float32, per-layer mapping (m, n) int32 and binary
+    tables (m, 2^n) int32."""
+
+    thresholds: Array
+    mappings: list
+    tables: list
+
+
+@dataclasses.dataclass
+class DWNArtifact:
+    """Lifecycle state for one :class:`~repro.dwn.spec.DWNSpec`.
+
+    Attributes:
+      spec: the validated build point (immutable identity).
+      params / buffers: trainable LUT state + thermometer thresholds.
+      frozen: hardware-semantics model (after :meth:`freeze`).
+      packed: device-staged serving operands (after :meth:`pack`).
+      calibration: provenance of the trained state (seed, epochs, fit
+        sample count, soft accuracy when trained) — rides in checkpoints.
+      history: per-epoch training history (loss/acc rows).
+    """
+
+    spec: DWNSpec
+    params: dict | None = None
+    buffers: dict | None = None
+    frozen: FrozenDWN | None = None
+    packed: PackedOperands | None = None
+    calibration: dict = dataclasses.field(default_factory=dict)
+    history: list = dataclasses.field(default_factory=list)
+
+    # -- stage bookkeeping ---------------------------------------------
+
+    @property
+    def stage(self) -> str:
+        if self.packed is not None:
+            return "packed"
+        if self.frozen is not None:
+            return "frozen"
+        if self.params is not None:
+            return "trained"
+        return "spec"
+
+    def _require(self, stage: str, method: str, hint: str) -> None:
+        if STAGES.index(self.stage) < STAGES.index(stage):
+            raise LifecycleError(
+                f"{method}() needs the artifact at stage {stage!r} but it "
+                f"is at {self.stage!r} ({self.spec.label}); call {hint} "
+                f"first")
+
+    def _invalidate_downstream(self) -> None:
+        self.frozen = None
+        self.packed = None
+
+    # -- stage: trained ------------------------------------------------
+
+    def fit(self, x_train: np.ndarray, *, seed: int = 0,
+            warmstart: bool = False, y_train: np.ndarray | None = None
+            ) -> "DWNArtifact":
+        """Fit thresholds + initialize LUT params without gradient epochs.
+
+        Bit-identical to the pre-spec ``build_dwn_model`` init: thresholds
+        from ``x_train`` under the spec's placement, LUT scores/tables
+        from ``PRNGKey(seed)``.  ``warmstart=True`` uses the correlation
+        warm start instead (requires ``y_train``).
+        """
+        cfg = self.spec.dwn_config()
+        key = jax.random.PRNGKey(seed)
+        if warmstart:
+            if y_train is None:
+                raise ValueError("fit(warmstart=True) needs y_train for "
+                                 "the correlation warm start")
+            from ..core.warmstart import warmstart_dwn
+            self.params, self.buffers = warmstart_dwn(key, cfg, x_train,
+                                                      y_train)
+        else:
+            self.params, self.buffers = init_dwn(key, cfg, x_train)
+        self.calibration = {"seed": seed, "epochs": 0,
+                            "warmstart": bool(warmstart),
+                            "n_fit": int(np.asarray(x_train).shape[0])}
+        self.history = []
+        self._invalidate_downstream()
+        return self
+
+    def train(self, data, *, epochs: int, batch: int = 128,
+              lr: float = 1e-3, seed: int = 0, warmstart: bool = False,
+              eval_every: int = 0, verbose: bool = False) -> "DWNArtifact":
+        """Train on JSC data with the scan-compiled paper-protocol trainer.
+
+        Args:
+          data: ``repro.data.jsc.JSCData`` split.
+          epochs: gradient epochs; 0 degrades to :meth:`fit` alone.
+          batch / lr / seed: paper-protocol training shape.
+          warmstart: correlation warm start before training.
+          eval_every: eval cadence (0 = final only, one device program).
+          verbose: per-epoch prints.
+
+        Returns self (stage "trained"); downstream stages invalidated.
+        """
+        if self.params is None:
+            self.fit(data.x_train, seed=seed, warmstart=warmstart,
+                     y_train=data.y_train)
+        if epochs > 0:
+            from ..core.training import train_dwn
+            res = train_dwn(self.spec.dwn_config(), data, epochs=epochs,
+                            batch=batch, lr=lr, seed=seed,
+                            params=self.params, buffers=self.buffers,
+                            eval_every=eval_every, verbose=verbose)
+            self.params, self.buffers = res.params, res.buffers
+            self.history = list(res.history)
+            self.calibration.update(
+                epochs=epochs, batch=batch, lr=lr,
+                soft_test_acc=round(float(res.soft_test_acc), 4))
+        self._invalidate_downstream()
+        return self
+
+    def adopt(self, params, buffers, *, note: str = "external"
+              ) -> "DWNArtifact":
+        """Adopt externally trained state (e.g. the vmapped multi-seed /
+        multi-point batch trainer) without re-running training here."""
+        self.params, self.buffers = params, buffers
+        self.calibration.setdefault("trained_by", note)
+        self.history = []
+        self._invalidate_downstream()
+        return self
+
+    # -- stage: frozen -------------------------------------------------
+
+    def freeze(self) -> "DWNArtifact":
+        """Freeze to hardware semantics; PEN specs quantize thresholds to
+        the spec's (1, n) fixed-point grid."""
+        self._require("trained", "freeze", "train()/fit()/adopt()")
+        self.frozen = freeze_dwn(self.params, self.buffers,
+                                 self.spec.dwn_config(),
+                                 input_frac_bits=self.spec.frac_bits)
+        self.packed = None
+        return self
+
+    # -- stage: packed -------------------------------------------------
+
+    def pack(self) -> "DWNArtifact":
+        """Stage the frozen operands on device for the packed serving
+        datapath (idempotent)."""
+        self._require("frozen", "pack", "freeze()")
+        if self.packed is None:
+            f = self.frozen
+            self.packed = PackedOperands(
+                thresholds=jnp.asarray(f.thresholds),
+                mappings=[jnp.asarray(i) for i in f.mapping_idx],
+                tables=[jnp.asarray(t) for t in f.tables_bin])
+        return self
+
+    # -- consumers -----------------------------------------------------
+
+    def serving_model(self, cfg=None):
+        """The staged :class:`~repro.serving.backends.DWNModelBundle`
+        every serving backend reads from.
+
+        Args:
+          cfg: optional ArchConfig recorded in the bundle (defaults to
+            the spec's arch view) — lets engines keep their registered
+            arch name in reports.
+        """
+        self._require("packed", "serving_model", "pack()")
+        from ..serving.backends import DWNModelBundle
+        return DWNModelBundle(
+            cfg=cfg if cfg is not None else self.spec.arch_config(),
+            dcfg=self.spec.dwn_config(), frozen=self.frozen,
+            thresholds=self.packed.thresholds,
+            mappings=self.packed.mappings, tables=self.packed.tables)
+
+    def hw_report(self, *, pipeline: bool = True):
+        """The FPGA cost report (``hw.cost.HWReport``) of the frozen
+        model at the spec's operating point."""
+        self._require("frozen", "hw_report", "freeze()")
+        from ..hw.cost import dwn_hw_report
+        return dwn_hw_report(self.frozen, variant=self.spec.variant,
+                             name=self.spec.preset,
+                             input_bits=self.spec.input_bits,
+                             pipeline=pipeline)
+
+    def verilog(self, *, name: str = "dwn_top",
+                pipeline: bool = True) -> str:
+        """Emit the synthesizable accelerator RTL for the frozen model."""
+        self._require("frozen", "verilog", "freeze()")
+        from ..hw.verilog import emit_dwn
+        return emit_dwn(self.frozen, name=name, pipeline=pipeline)
+
+    # -- persistence ---------------------------------------------------
+
+    def save(self, directory, *, step: int = 0):
+        """Checkpoint the artifact (atomic, sha256-verified); the spec
+        and stage ride in the manifest.  Returns the checkpoint path."""
+        from ..runtime.checkpoint import save_artifact
+        return save_artifact(directory, self, step=step)
+
+    @classmethod
+    def load(cls, directory, *, step: int | None = None) -> "DWNArtifact":
+        """Restore an artifact saved by :meth:`save` (its packed operands
+        are re-staged so packed serving outputs are bit-exact)."""
+        from ..runtime.checkpoint import load_artifact
+        return load_artifact(directory, step=step)
+
+    def summary(self) -> dict[str, Any]:
+        """JSON-able one-glance description (spec + stage + calibration)."""
+        return {"spec": self.spec.to_dict(),
+                "fingerprint": self.spec.fingerprint(),
+                "stage": self.stage, "calibration": dict(self.calibration)}
+
+
+__all__ = ["DWNArtifact", "LifecycleError", "PackedOperands", "STAGES"]

@@ -280,18 +280,23 @@ class HWReport:
         return self.total_luts * (1e3 / self.fmax_mhz)
 
 
-def dwn_hw_report(frozen, *, variant: str, name: str,
+def dwn_hw_report(frozen, *, variant: str | None = None,
+                  name: str | None = None,
                   input_bits: int | None = None,
                   pipeline: bool = True) -> HWReport:
-    """Full-accelerator cost for a FrozenDWN (repro.core.model).
+    """Full-accelerator cost for a FrozenDWN or a ``repro.dwn`` artifact.
 
     TEN: inputs are already thermometer bits -> no encoder.
     PEN/PEN+FT: on-chip encoder at `input_bits` total width (1, n).
 
     Args:
-      frozen: the FrozenDWN whose mapping/thresholds set encoder dedup.
-      variant: "TEN" | "PEN" | "PEN+FT" (PEN variants price the encoder).
-      name: model name recorded in the report.
+      frozen: the FrozenDWN whose mapping/thresholds set encoder dedup —
+        or a ``repro.dwn.DWNArtifact`` at stage >= "frozen", in which
+        case ``variant``/``name``/``input_bits`` default to its spec.
+      variant: "TEN" | "PEN" | "PEN+FT" (PEN variants price the encoder);
+        required unless an artifact is given.
+      name: model name recorded in the report; required unless an
+        artifact is given.
       input_bits: PEN input width in total bits (required unless TEN).
       pipeline: register component boundaries (sets FF counts and makes
         ``fmax_mhz`` the per-stage estimate).
@@ -300,6 +305,23 @@ def dwn_hw_report(frozen, *, variant: str, name: str,
     """
     from ..core.thermometer import used_threshold_mask, distinct_used_thresholds
     from ..core.model import DWNConfig  # noqa: F401  (type only)
+
+    spec = getattr(frozen, "spec", None)
+    if spec is not None:                 # a DWNArtifact, not a FrozenDWN
+        art = frozen
+        if art.frozen is None:
+            raise ValueError(
+                f"artifact {spec.label} is at stage {art.stage!r}; call "
+                f"freeze() before hw_report")
+        frozen = art.frozen
+        variant = variant if variant is not None else spec.variant
+        name = name if name is not None else spec.preset
+        if input_bits is None:
+            input_bits = spec.input_bits
+    if variant is None or name is None:
+        raise TypeError("dwn_hw_report needs variant= and name= when "
+                        "given a bare FrozenDWN (or pass a DWNArtifact, "
+                        "whose spec carries both)")
 
     cfg = frozen.cfg
     luts: dict = {}

@@ -23,6 +23,11 @@ Usage:
     python -m repro.launch.serve --arch dwn-jsc-lg --reduced
     python -m repro.launch.serve --arch dwn-jsc-sm --reduced --ragged \
         --backend packed-xla
+    python -m repro.launch.serve --reduced \
+        --spec '{"preset": "sm-50", "variant": "PEN", "input_bits": 9}'
+
+DWN ``--arch`` strings are deprecated shims: they resolve to registered
+``repro.dwn.DWNSpec`` presets (``--spec`` constructs one inline).
 """
 
 from __future__ import annotations
@@ -38,8 +43,13 @@ from ..serving import ServingEngine, available_backends
 from ..serving.scheduler import next_pow2
 
 
-def dwn_serve(cfg, args) -> int:
-    """DWN classification serving through the engine + scheduler."""
+def dwn_serve(target, args) -> int:
+    """DWN classification serving through the engine + scheduler.
+
+    ``target`` is anything the engine accepts: a registered arch name /
+    ArchConfig (legacy), a ``DWNSpec`` (from ``--spec``), or a packed
+    ``DWNArtifact``.
+    """
     # --reduced shrinks the request volume, not the model: the datapath
     # (T=200 encode, m LUTs) is the thing being served.
     n_train = 2000 if args.reduced else 20000
@@ -48,7 +58,7 @@ def dwn_serve(cfg, args) -> int:
     max_bucket = next_pow2(batch)
 
     engine = ServingEngine(
-        cfg, backend=args.backend or None, max_bucket=max_bucket,
+        target, backend=args.backend or None, max_bucket=max_bucket,
         min_bucket=min(8, max_bucket), n_train=n_train, seed=args.seed,
         data_parallel=not args.no_data_parallel)
     # compile the serve bucket before timing starts (ragged streams may
@@ -95,7 +105,14 @@ def lm_serve(cfg, args) -> int:
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="",
+                    help="registered arch name (LM or DWN); DWN aliases "
+                         "are deprecated shims over DWNSpec presets")
+    ap.add_argument("--spec", default="",
+                    help="DWN only: a DWNSpec as JSON, e.g. "
+                         '\'{"preset": "sm-50", "variant": "PEN", '
+                         '"input_bits": 9}\' — the typed replacement for '
+                         "--arch dwn-jsc-* strings")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=0,
                     help="request batch size (default: 4 for LM archs, "
@@ -121,8 +138,21 @@ def main(argv=None):
     ap.add_argument("--greedy", action="store_true", default=True)
     args = ap.parse_args(argv)
 
+    if args.spec:
+        if args.arch:
+            ap.error("--arch and --spec are mutually exclusive")
+        from ..dwn import DWNSpec
+        return dwn_serve(DWNSpec(**json.loads(args.spec)), args)
+    if not args.arch:
+        ap.error("one of --arch or --spec is required")
     cfg = get_arch(args.arch)
     if cfg.family == "dwn":
+        import warnings
+        warnings.warn(
+            f"--arch {args.arch!r} is a legacy DWN alias; it now "
+            f"delegates to the registered DWNSpec preset of the same "
+            f"name (prefer --spec or repro.dwn.get_spec)",
+            DeprecationWarning, stacklevel=2)
         return dwn_serve(cfg, args)
     return lm_serve(cfg, args)
 

@@ -75,28 +75,36 @@ def build(cfg, mesh, *, lr: float, num_micro: int = 1):
 
 def dwn_train(cfg, args) -> int:
     """Scan-compiled DWN training: one device program per epoch block,
-    multi-seed runs vmapped into a single program."""
-    from ..core.model import DWNConfig
+    multi-seed runs vmapped into a single program.
+
+    The arch string resolves to a typed ``repro.dwn.DWNSpec``; with
+    ``--artifact-dir`` each trained model is carried through the full
+    lifecycle (freeze → pack) and checkpointed as a ``DWNArtifact``.
+    """
     from ..data.jsc import load_jsc
+    from ..dwn import DWNArtifact, resolve_spec
     from ..training import ScanTrainer, train_dwn_batch
 
+    spec = resolve_spec(args.arch)
+    dcfg = spec.dwn_config()
     n_train = 4000 if args.reduced else 20000
     data = load_jsc(n_train, max(1000, n_train // 4), seed=args.seed)
-    dcfg = DWNConfig(lut_counts=(cfg.dwn_luts,),
-                     bits_per_feature=cfg.dwn_bits,
-                     encoding=cfg.dwn_encoding)
     seeds = [int(s) for s in str(args.seeds).split(",") if s != ""]
     batch = args.batch if args.batch > 0 else 128
     epochs = args.epochs
 
     rep = {"arch": cfg.name, "engine": "scan", "epochs": epochs,
-           "batch": batch, "n_train": n_train, "seeds": seeds}
+           "batch": batch, "n_train": n_train, "seeds": seeds,
+           "spec": spec.to_dict(), "spec_fingerprint": spec.fingerprint()}
+    trained: list[tuple[int, object, object, float]] = []
     if len(seeds) == 1:
         trainer = ScanTrainer(dcfg, data, batch=batch, lr=args.lr,
                               seed=seeds[0])
         res = trainer.train(epochs, eval_every=args.eval_every,
                             verbose=not args.quiet)
         secs = [h["sec"] for h in res.history]
+        trained.append((seeds[0], res.params, res.buffers,
+                        res.soft_test_acc))
         rep.update({
             "soft_test_acc": [round(res.soft_test_acc, 4)],
             "epoch_s": round(float(np.median(secs)), 3) if secs else None,
@@ -109,6 +117,8 @@ def dwn_train(cfg, args) -> int:
         out = train_dwn_batch(dcfg, data, epochs=epochs, seeds=seeds,
                               batch=batch, lr=args.lr)
         spe = data.x_train.shape[0] // batch
+        trained.extend((s, r.params, r.buffers, r.soft_test_acc)
+                       for s, r in zip(seeds, out.results))
         rep.update({
             "soft_test_acc": [round(r.soft_test_acc, 4)
                               for r in out.results],
@@ -119,6 +129,18 @@ def dwn_train(cfg, args) -> int:
                 out.wall_s / max(1, epochs) / len(seeds), 3),
             "steps_per_epoch": spe,
         })
+    if args.artifact_dir:
+        saved = []
+        for seed, params, buffers, acc in trained:
+            art = DWNArtifact(spec).adopt(params, buffers,
+                                          note="launch.train")
+            art.calibration.update(seed=seed, epochs=epochs,
+                                   soft_test_acc=round(float(acc), 4))
+            path = art.freeze().pack().save(
+                f"{args.artifact_dir}/seed{seed}")
+            saved.append({"seed": seed, "path": str(path),
+                          "stage": art.stage})
+        rep["artifacts"] = saved
     print(json.dumps(rep))
     return 0
 
@@ -148,6 +170,10 @@ def main(argv=None):
     ap.add_argument("--eval-every", type=int, default=1,
                     help="DWN mode: eval cadence (0 = final only, whole "
                          "run as one device program)")
+    ap.add_argument("--artifact-dir", default="",
+                    help="DWN mode: checkpoint each trained model as a "
+                         "DWNArtifact (freeze + pack + save) under "
+                         "<dir>/seed<N>")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 

@@ -152,6 +152,104 @@ def restore_latest(directory, like, *, shardings=None):
     return s, tree, extra
 
 
+# ---------------------------------------------------------------------------
+# DWN artifact checkpoints (repro.dwn lifecycle)
+# ---------------------------------------------------------------------------
+
+def _artifact_like(spec, leaves: dict) -> dict:
+    """Zero-filled like-trees for the artifact groups present in a
+    manifest, with shapes/dtypes derived from the spec alone (no data
+    needed to restore)."""
+    dcfg = spec.dwn_config()
+    layer_specs = dcfg.layer_specs()
+    F, T = dcfg.num_features, dcfg.bits_per_feature
+    like: dict = {}
+    if any(name.startswith("params/") for name in leaves):
+        like["params"] = {"layers": [
+            {"scores": np.zeros((s.num_luts, s.fan_in, s.num_candidates),
+                                np.float32),
+             "tables": np.zeros((s.num_luts, s.table_size), np.float32)}
+            for s in layer_specs]}
+        like["buffers"] = {"thresholds": np.zeros((F, T), np.float32)}
+    if any(name.startswith("frozen/") for name in leaves):
+        like["frozen"] = {
+            "thresholds": np.zeros((F, T), np.float32),
+            "mapping_idx": [np.zeros((s.num_luts, s.fan_in), np.int32)
+                            for s in layer_specs],
+            "tables_bin": [np.zeros((s.num_luts, s.table_size), np.int32)
+                           for s in layer_specs]}
+    return like
+
+
+def save_artifact(directory: str | os.PathLike, artifact, *,
+                  step: int = 0) -> Path:
+    """Save a ``repro.dwn.DWNArtifact`` (atomic, sha256-verified).
+
+    The pytree holds whichever stage state exists (params/buffers and/or
+    the frozen arrays); the spec, stage and calibration ride in the
+    manifest ``extra`` so :func:`load_artifact` reconstructs the exact
+    build without external context.  Returns the checkpoint path.
+    """
+    tree: dict = {}
+    if artifact.params is not None:
+        tree["params"] = artifact.params
+        tree["buffers"] = artifact.buffers
+    if artifact.frozen is not None:
+        f = artifact.frozen
+        tree["frozen"] = {"thresholds": np.asarray(f.thresholds),
+                          "mapping_idx": [np.asarray(i)
+                                          for i in f.mapping_idx],
+                          "tables_bin": [np.asarray(t)
+                                         for t in f.tables_bin]}
+    extra = {"kind": "dwn-artifact",
+             "spec": artifact.spec.to_dict(),
+             "spec_fingerprint": artifact.spec.fingerprint(),
+             "stage": artifact.stage,
+             "calibration": dict(artifact.calibration)}
+    return save(directory, step, tree, extra=extra)
+
+
+def load_artifact(directory: str | os.PathLike, *,
+                  step: int | None = None):
+    """Restore a ``repro.dwn.DWNArtifact`` saved by :func:`save_artifact`.
+
+    The spec is read from the manifest and re-validated at construction;
+    an artifact saved at stage "packed" is re-staged on device so its
+    packed serving outputs are bit-exact vs the saved model.
+    """
+    from ..dwn import DWNArtifact, DWNSpec
+    from ..core.model import FrozenDWN
+
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed artifact checkpoint under {directory}")
+    base = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((base / "manifest.json").read_text())
+    extra = manifest["extra"]
+    if extra.get("kind") != "dwn-artifact":
+        raise ValueError(f"checkpoint at {base} is not a DWN artifact "
+                         f"(kind={extra.get('kind')!r})")
+    spec = DWNSpec.from_dict(extra["spec"])
+    like = _artifact_like(spec, manifest["leaves"])
+    tree, _ = restore(directory, step, like)
+    art = DWNArtifact(spec)
+    art.calibration = dict(extra.get("calibration", {}))
+    if "params" in tree:
+        art.params, art.buffers = tree["params"], tree["buffers"]
+    if "frozen" in tree:
+        f = tree["frozen"]
+        art.frozen = FrozenDWN(
+            spec.dwn_config(), np.asarray(f["thresholds"]),
+            [np.asarray(i) for i in f["mapping_idx"]],
+            [np.asarray(t) for t in f["tables_bin"]],
+            input_frac_bits=spec.frac_bits)
+    if extra.get("stage") == "packed" and art.frozen is not None:
+        art.pack()
+    return art
+
+
 def garbage_collect(directory: str | os.PathLike, keep: int = 3) -> None:
     """Delete all but the newest ``keep`` committed checkpoints (plus any
     orphaned tmp dirs from crashed writers)."""

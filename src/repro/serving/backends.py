@@ -33,8 +33,8 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..core.classifier import predict
-from ..core.model import DWNConfig, FrozenDWN, apply_hard, apply_hard_packed, \
-    freeze, init_dwn
+from ..core.model import DWNConfig, FrozenDWN, apply_hard, apply_hard_packed
+from ..core.thermometer import quantize_fixed_point
 from ..kernels.fused import ops as fused_ops
 
 Array = jax.Array
@@ -70,27 +70,26 @@ class DWNModelBundle:
 
 def build_dwn_model(cfg: ArchConfig, x_train: np.ndarray,
                     seed: int = 0) -> DWNModelBundle:
-    """Init + freeze the arch's DWN and stage its operands on device.
+    """Deprecated shim: init + freeze an arch's DWN and stage operands.
 
-    Args:
-      cfg: served arch; ``dwn_luts`` (m), ``dwn_bits`` (T) and
-        ``dwn_encoding`` (threshold placement) shape the datapath.
-      x_train: (N, F) normalized features the thresholds are fit on.
-      seed: PRNG seed for the (untrained) LUT init — backends compare
-        datapaths, not weights, so determinism is what matters.
+    The canonical construction path is the ``repro.dwn`` lifecycle::
 
-    Returns the staged :class:`DWNModelBundle`.
+        spec = DWNSpec.from_arch(cfg)            # or a spec preset
+        bundle = (DWNArtifact(spec).fit(x_train, seed=seed)
+                  .freeze().pack().serving_model())
+
+    This shim delegates there (bit-identical output — same init PRNG,
+    same freeze) and warns.
     """
-    dcfg = DWNConfig(lut_counts=(cfg.dwn_luts,),
-                     bits_per_feature=cfg.dwn_bits,
-                     encoding=cfg.dwn_encoding)
-    params, buffers = init_dwn(jax.random.PRNGKey(seed), dcfg, x_train)
-    frozen = freeze(params, buffers, dcfg)
-    return DWNModelBundle(
-        cfg=cfg, dcfg=dcfg, frozen=frozen,
-        thresholds=jnp.asarray(frozen.thresholds),
-        mappings=[jnp.asarray(i) for i in frozen.mapping_idx],
-        tables=[jnp.asarray(t) for t in frozen.tables_bin])
+    import warnings
+    warnings.warn(
+        "serving.backends.build_dwn_model is deprecated; construct a "
+        "repro.dwn.DWNSpec and use DWNArtifact(spec).fit(...).freeze()"
+        ".pack().serving_model() instead", DeprecationWarning,
+        stacklevel=2)
+    from ..dwn import DWNArtifact, DWNSpec
+    art = DWNArtifact(DWNSpec.from_arch(cfg)).fit(x_train, seed=seed)
+    return art.freeze().pack().serving_model(cfg=cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -144,8 +143,14 @@ class FusedPackedBackend(Backend):
         fwd = fused_ops.make_forward_packed(
             model.thresholds, model.mappings, model.tables,
             model.num_classes)
+        # PEN models quantize inputs to the (1, n) grid before the
+        # comparator bank (apply_hard semantics); the fused kernel sees
+        # already-quantized rows so it stays bit-exact vs the oracle.
+        frac = model.frozen.input_frac_bits
 
         def fn(x: Array):
+            if frac is not None:
+                x = quantize_fixed_point(x, frac)
             counts, pred = fwd(x)
             return counts.astype(jnp.float32), pred
         return fn

@@ -36,8 +36,7 @@ from ..models import api
 from ..sharding.partition import Partitioner
 from ..launch.mesh import make_data_mesh, make_host_mesh
 from .backends import (AutoSelector, BoundBackend, DWNModelBundle,
-                       available_backends, build_dwn_model, get_backend,
-                       verify_backends)
+                       available_backends, get_backend, verify_backends)
 from .scheduler import MicrobatchScheduler, Request, latency_stats
 
 
@@ -45,13 +44,18 @@ class ServingEngine:
     """Unified serving engine; family dispatch happens at construction.
 
     Args:
-      arch: arch name or ``ArchConfig``; ``family`` selects the path.
+      arch: what to serve — an arch name or ``ArchConfig`` (``family``
+        selects the path), a ``repro.dwn.DWNSpec`` (the engine builds
+        the artifact lifecycle itself), or a ``repro.dwn.DWNArtifact``
+        (served as-is; trained/frozen state is reused, missing stages
+        are completed in place).
       backend: DWN datapath backend name.  ``None`` resolves from the
-        arch's ``dwn_datapath`` field when that names a registered
-        backend, else ``"fused-packed"``.  ``"auto"`` calibrates every
-        bit-exact backend per batch bucket at startup and serves each
-        bucket on the fastest (see ``backends.AutoSelector``); explicit
-        names remain the override.
+        spec's validated ``datapath`` field (legacy archs bridge through
+        ``DWNSpec.from_arch``, which keeps the old fused-packed
+        fallback).  ``"auto"`` calibrates every bit-exact backend per
+        batch bucket at startup and serves each bucket on the fastest
+        (see ``backends.AutoSelector``); explicit names remain the
+        override.
       max_bucket / min_bucket: the power-of-two batch-bucket ladder.
       data_parallel: shard DWN buckets over the ("data",) host mesh with
         ``shard_map`` (buckets not divisible by the device count fall back
@@ -72,7 +76,22 @@ class ServingEngine:
                  reduced: bool = False, n_train: int = 2000,
                  seed: int = 0, prompt_len: int = 32, gen: int = 16,
                  model_parallel: int = 1):
-        cfg = get_arch(arch) if isinstance(arch, str) else arch
+        from ..dwn import DWNArtifact, DWNSpec, has_spec, get_spec
+        self.artifact: "DWNArtifact | None" = None
+        self.spec: "DWNSpec | None" = None
+        if isinstance(arch, DWNArtifact):
+            self.artifact, self.spec = arch, arch.spec
+            cfg = self.spec.arch_config()
+        elif isinstance(arch, DWNSpec):
+            self.spec = arch
+            cfg = arch.arch_config()
+        else:
+            cfg = get_arch(arch) if isinstance(arch, str) else arch
+            if cfg.family == "dwn":
+                # registered spec presets are the blessed route for the
+                # old --arch strings; raw ArchConfigs bridge via from_arch
+                self.spec = (get_spec(cfg.name) if has_spec(cfg.name)
+                             else DWNSpec.from_arch(cfg))
         self.cfg = cfg
         self.seed = seed
         self.family = "dwn" if cfg.family == "dwn" else "lm"
@@ -95,10 +114,21 @@ class ServingEngine:
     def _init_dwn(self, cfg: ArchConfig, backend: str | None,
                   n_train: int, data_parallel: bool, verify: bool):
         from ..data.jsc import load_jsc
+        from ..dwn import DWNArtifact
         self.data = load_jsc(n_train, max(self.scheduler.max_bucket, 512),
                              seed=self.seed)
-        self.model: DWNModelBundle = build_dwn_model(cfg, self.data.x_train,
-                                                     self.seed)
+        # one construction path: the artifact lifecycle.  A caller-built
+        # artifact is served as-is; a spec-only engine fits thresholds on
+        # its own data split (exactly the pre-spec build_dwn_model init).
+        art = self.artifact if self.artifact is not None \
+            else DWNArtifact(self.spec)
+        if art.stage == "spec":
+            art.fit(self.data.x_train, seed=self.seed)
+        if art.stage == "trained":
+            art.freeze()
+        art.pack()
+        self.artifact = art
+        self.model: DWNModelBundle = art.serving_model(cfg=cfg)
         self.mesh = make_data_mesh()
         self.n_data = self.mesh.shape["data"]
         self._part = Partitioner(self.mesh)
@@ -108,9 +138,9 @@ class ServingEngine:
                                             wrap=wrap)
                          for name in available_backends()}
         if backend is None:
-            backend = (cfg.dwn_datapath
-                       if cfg.dwn_datapath in self.backends
-                       else "fused-packed")
+            # the spec's datapath is validated at construction, so no
+            # arch-name-suffix parsing or registry fallback is needed
+            backend = self.spec.datapath
         self.auto: AutoSelector | None = None
         probe = self.data.x_test[:self.scheduler.max_bucket]
         if verify or backend == "auto":
@@ -346,6 +376,9 @@ class ServingEngine:
                 "devices": self.n_data,
                 "luts": self.cfg.dwn_luts,
                 "bits_per_feature": self.cfg.dwn_bits,
+                "spec": self.spec.to_dict(),
+                "spec_fingerprint": self.spec.fingerprint(),
+                "artifact_stage": self.artifact.stage,
             })
             if self.auto is not None:
                 out["auto"] = {

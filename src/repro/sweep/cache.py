@@ -25,9 +25,10 @@ def _code_fingerprint() -> str:
     """Hash of the source files whose edits change sweep numbers.
 
     Includes the trainer stack (core/training, core/lut_layer, optim/adam,
-    and the scan engine + batch trainer): cached accuracies were produced
-    by those semantics, so editing them must invalidate, not silently
-    serve, old entries.
+    and the scan engine + batch trainer) and the ``repro.dwn`` lifecycle
+    package (spec + artifact): cached results were produced by those
+    semantics, so editing them must invalidate, not silently serve, old
+    entries.
     """
     import repro.core.model as m1
     import repro.core.thermometer as m2
@@ -38,8 +39,10 @@ def _code_fingerprint() -> str:
     import repro.optim.adam as m7
     import repro.training.engine as m8
     import repro.training.batch as m9
+    import repro.dwn.spec as m10
+    import repro.dwn.artifact as m11
     h = hashlib.sha256()
-    for mod in (m1, m2, m3, m4, m5, m6, m7, m8, m9):
+    for mod in (m1, m2, m3, m4, m5, m6, m7, m8, m9, m10, m11):
         try:
             with open(mod.__file__, "rb") as fh:
                 h.update(fh.read())
@@ -63,12 +66,17 @@ def config_hash(payload: dict) -> str:
 
 def point_key(point, settings) -> str:
     """Cache key for one (SweepPoint, SweepSettings) pair — also keyed by
-    the code fingerprint (computed once per process)."""
+    the point's resolved :class:`~repro.dwn.spec.DWNSpec` (the typed
+    identity every artifact is built from) and the code fingerprint
+    (computed once per process)."""
     global _FINGERPRINT
     if _FINGERPRINT is None:
         _FINGERPRINT = _code_fingerprint()
+    from ..dwn.spec import DWNSpec
+    spec = DWNSpec.from_point(point, datapath=settings.serve_backend)
     return config_hash({"point": point.to_dict(),
                         "settings": dataclasses.asdict(settings),
+                        "spec": spec.to_dict(),
                         "code": _FINGERPRINT})
 
 

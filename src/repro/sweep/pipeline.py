@@ -1,13 +1,15 @@
 """The shared sweep pipeline: every grid point takes the same path.
 
-For each :class:`~repro.sweep.grid.SweepPoint` the runner
+Each :class:`~repro.sweep.grid.SweepPoint` becomes one
+``repro.dwn.DWNArtifact`` (typed spec → trained → frozen → packed) and
+every measurement axis reads from that artifact.  The runner
 
-1. instantiates the model config (`core.model.DWNConfig` with the point's
-   LUT-layer width, encoder resolution T, and threshold placement) and
-   builds/trains it once per unique (preset, T, placement) — TEN and PEN
-   variants of the same model share weights, as in the paper.  Points that
-   agree on (preset, T) train together as ONE vmapped scan-compiled
-   program (``repro.training.batch``) instead of sequential loops;
+1. derives the point's :class:`~repro.dwn.spec.DWNSpec` and trains its
+   model once per unique (preset, T, placement) — TEN and PEN variants of
+   the same model share weights, as in the paper, by ``adopt``-ing the
+   shared trained state into each variant's artifact.  Points that agree
+   on (preset, T) train together as ONE vmapped scan-compiled program
+   (``repro.training.batch``) instead of sequential loops;
 2. computes **hard-inference accuracy** through ``apply_hard_packed``
    (the packed uint32 datapath, bit-exact vs the float oracle);
 3. scores **FPGA cost** via ``hw.cost.dwn_hw_report`` — the full
@@ -35,11 +37,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (JSC_PRESETS, eval_accuracy_hard_packed, freeze,
-                    init_dwn, train_dwn)
-from ..core.model import DWNConfig, FrozenDWN
+from ..core import eval_accuracy_hard_packed, init_dwn, train_dwn
+from ..core.model import DWNConfig
 from ..core.warmstart import warmstart_dwn
 from ..data.jsc import load_jsc
+from ..dwn import DWNArtifact, DWNSpec
 from ..hw.cost import dwn_hw_report
 from ..kernels.fused import ops as fused_ops
 from .artifacts import lut_error_pct, paper_reference
@@ -86,23 +88,34 @@ class SweepSettings:
 
 
 class SweepRunner:
-    """Runs grid points through the shared pipeline, memoizing models and
-    serving engines across points that share them."""
+    """Runs grid points through the shared pipeline.
+
+    Every point is materialized as ONE ``repro.dwn.DWNArtifact``
+    (spec → trained → frozen → packed); trained params are still shared
+    across points that differ only in TEN/PEN + input width (the paper's
+    weight-sharing protocol) via the ``_models`` memo, and each variant's
+    artifact ``adopt``s them before freezing to its own operating point.
+    """
 
     def __init__(self, settings: SweepSettings):
         self.settings = settings
         self.data = load_jsc(settings.n_train, settings.n_test,
                              seed=settings.data_seed)
         self._models: dict[tuple, tuple] = {}       # (preset,T,pl) -> (cfg,p,b)
-        self._serve: dict[tuple, tuple] = {}        # same key -> (thru, p50)
+        self._artifacts: dict[SweepPoint, DWNArtifact] = {}
+        self._serve: dict[tuple, tuple] = {}        # point key -> (thru, p50)
 
-    # -- model / frozen ------------------------------------------------
+    # -- spec / model / artifact ---------------------------------------
+
+    def spec_for(self, point: SweepPoint) -> DWNSpec:
+        """The validated spec of one grid point (carries the serving
+        datapath the point is timed on)."""
+        return DWNSpec.from_point(point,
+                                  datapath=self.settings.serve_backend)
 
     @staticmethod
     def _cfg_for(point: SweepPoint) -> DWNConfig:
-        return dataclasses.replace(JSC_PRESETS[point.preset],
-                                   bits_per_feature=point.bits,
-                                   encoding=point.placement)
+        return DWNSpec.from_point(point).dwn_config()
 
     def _init_model(self, cfg: DWNConfig):
         s = self.settings
@@ -174,23 +187,41 @@ class SweepRunner:
             self._models[key] = (cfg, params, buffers)
         return self._models[key]
 
-    def frozen_for(self, point: SweepPoint) -> tuple[DWNConfig, FrozenDWN]:
-        """Freeze the point's model to hardware semantics (PEN points
-        quantize thresholds to the point's (1, n) fixed-point grid)."""
-        cfg, params, buffers = self.model_for(point)
-        return cfg, freeze(params, buffers, cfg,
-                           input_frac_bits=point.frac_bits)
+    def artifact_for(self, point: SweepPoint) -> DWNArtifact:
+        """The point's frozen :class:`DWNArtifact` — built once per point;
+        trained state is adopted from the shared ``model_for`` memo, then
+        frozen at the point's own operating point (PEN points quantize
+        thresholds to the spec's (1, n) fixed-point grid)."""
+        if point not in self._artifacts:
+            _, params, buffers = self.model_for(point)
+            art = DWNArtifact(self.spec_for(point))
+            art.adopt(params, buffers, note="sweep").freeze()
+            self._artifacts[point] = art
+        return self._artifacts[point]
 
     # -- measurement axes ----------------------------------------------
 
-    def _time_kernel(self, frozen: FrozenDWN, cfg: DWNConfig) -> float:
-        """Fused packed kernel wall time in µs per kernel_batch call."""
+    def _time_kernel(self, art: DWNArtifact) -> float:
+        """Fused packed kernel wall time in µs per kernel_batch call.
+
+        PEN points quantize inputs to the spec's (1, n) grid inside the
+        timed step, exactly like the production fused backend — the
+        kernel axis times the same datapath serving runs.
+        """
         s = self.settings
-        fwd = jax.jit(fused_ops.make_forward_packed(
-            jnp.asarray(frozen.thresholds),
-            [jnp.asarray(i) for i in frozen.mapping_idx],
-            [jnp.asarray(t) for t in frozen.tables_bin],
-            cfg.num_classes))
+        packed = art.pack().packed
+        inner = fused_ops.make_forward_packed(
+            packed.thresholds, packed.mappings, packed.tables,
+            art.spec.dwn_config().num_classes)
+        frac = art.frozen.input_frac_bits
+
+        def step(x):
+            if frac is not None:
+                from ..core.thermometer import quantize_fixed_point
+                x = quantize_fixed_point(x, frac)
+            return inner(x)
+
+        fwd = jax.jit(step)
         n = self.data.x_test.shape[0]
         reps = -(-s.kernel_batch // n)             # tile if the split is small
         x = jnp.asarray(np.tile(self.data.x_test,
@@ -205,16 +236,15 @@ class SweepRunner:
 
     def _serve_point(self, point: SweepPoint) -> tuple[float, float]:
         """(throughput samples/s, p50 compute ms) through the engine —
-        measured once per unique (preset, T, placement)."""
-        key = (point.preset, point.bits, point.placement)
+        the point's own packed artifact is what gets served (PEN points
+        serve the quantized datapath, bit-exact vs the oracle)."""
+        key = (point.preset, point.bits, point.placement, point.variant,
+               point.input_bits)
         if key not in self._serve:
-            from ..configs.dwn_jsc import sweep_arch
             from ..serving import ServingEngine
             s = self.settings
             engine = ServingEngine(
-                sweep_arch(point.preset, bits=point.bits,
-                           placement=point.placement,
-                           datapath=s.serve_backend),
+                self.artifact_for(point).pack(),
                 backend=s.serve_backend, max_bucket=s.serve_batch,
                 min_bucket=min(8, s.serve_batch),
                 n_train=min(s.n_train, 2000), seed=s.seed)
@@ -233,9 +263,8 @@ class SweepRunner:
     def run_point(self, point: SweepPoint) -> PointResult:
         """Run every enabled axis at one grid point."""
         s = self.settings
-        cfg, frozen = self.frozen_for(point)
-        rep = dwn_hw_report(frozen, variant=point.variant, name=point.preset,
-                            input_bits=point.input_bits)
+        art = self.artifact_for(point)
+        rep = dwn_hw_report(art)
         paper = paper_reference(point)
         res = PointResult(
             point=point,
@@ -247,9 +276,9 @@ class SweepRunner:
             lut_error_pct=lut_error_pct(rep.total_luts, paper))
         if s.accuracy:
             res.accuracy = eval_accuracy_hard_packed(
-                frozen, self.data.x_test, self.data.y_test)
+                art.frozen, self.data.x_test, self.data.y_test)
         if s.kernel:
-            res.kernel_us = round(self._time_kernel(frozen, cfg), 1)
+            res.kernel_us = round(self._time_kernel(art), 1)
             res.kernel_batch = s.kernel_batch
         if s.serve:
             thru, p50 = self._serve_point(point)

@@ -1,0 +1,334 @@
+"""Unified DWN artifact API tests.
+
+Covers: DWNSpec construction validation (actionable errors), the spec
+preset registry behind the old ``--arch dwn-jsc-*`` strings, lifecycle
+stage ordering, stage-boundary bit-exact parity vs the pre-refactor
+construction glue (``build_dwn_model`` / ``sweep_arch`` / engine arch
+strings), Table I TEN tolerances through the artifact route, the
+checkpoint roundtrip, and the sweep cache's spec fingerprinting.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.dwn import (DWNArtifact, DWNSpec, LifecycleError, get_spec,
+                      has_spec, resolve_spec, spec_presets)
+from repro.data.jsc import load_jsc
+
+
+@pytest.fixture(scope="module")
+def data():
+    return load_jsc(512, 128)
+
+
+# ---------------------------------------------------------------------------
+# spec validation: every invalid combination raises with a usable message
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_invalid_thermometer_bits():
+    with pytest.raises(ValueError, match="T must be an integer >= 1"):
+        DWNSpec(preset="sm-50", bits=0)
+    with pytest.raises(ValueError, match="T must be"):
+        DWNSpec(preset="sm-50", bits=-3)
+
+
+def test_spec_rejects_unknown_placement():
+    with pytest.raises(ValueError, match="supported placements.*uniform"):
+        DWNSpec(preset="sm-50", placement="triangular")
+
+
+def test_spec_rejects_unregistered_datapath():
+    # "corner"/"gather" are dryrun datapath variants, never serving
+    # backends — the spec refuses them with the registered list
+    with pytest.raises(ValueError,
+                       match="unregistered serving datapath.*fused-packed"):
+        DWNSpec(preset="sm-50", datapath="corner")
+
+
+def test_spec_rejects_pen_ten_mismatch():
+    with pytest.raises(ValueError, match="PEN.*requires input_bits"):
+        DWNSpec(preset="sm-50", variant="PEN")
+    with pytest.raises(ValueError, match="TEN.*must not set input_bits"):
+        DWNSpec(preset="sm-50", variant="TEN", input_bits=9)
+    with pytest.raises(ValueError, match="at least 2"):
+        DWNSpec(preset="sm-50", variant="PEN", input_bits=1)
+
+
+def test_spec_rejects_unknown_preset_variant_grouping():
+    with pytest.raises(ValueError, match="known JSC tiers"):
+        DWNSpec(preset="xl-9000")
+    with pytest.raises(ValueError, match="unknown encoding variant"):
+        DWNSpec(preset="sm-50", variant="BEN")
+    with pytest.raises(ValueError, match="unknown popcount grouping"):
+        DWNSpec(preset="sm-50", grouping="diagonal")
+
+
+def test_spec_roundtrip_and_fingerprint():
+    spec = DWNSpec(preset="md-360", variant="PEN", bits=100,
+                   placement="gaussian", input_bits=9,
+                   datapath="packed-xla")
+    assert DWNSpec.from_dict(spec.to_dict()) == spec
+    assert spec.frac_bits == 8 and spec.luts == 360
+    fp = spec.fingerprint()
+    assert fp == spec.fingerprint()                       # stable
+    import dataclasses
+    assert dataclasses.replace(spec, bits=101).fingerprint() != fp
+    assert DWNSpec(preset="sm-10").frac_bits is None
+
+
+# ---------------------------------------------------------------------------
+# preset registry: the old --arch strings are typed specs now
+# ---------------------------------------------------------------------------
+
+def test_serving_alias_spec_presets_registered():
+    names = spec_presets()
+    for tier, preset in (("sm", "sm-50"), ("md", "md-360"),
+                         ("lg", "lg-2400")):
+        assert f"dwn-jsc-{tier}" in names
+        assert get_spec(f"dwn-jsc-{tier}").preset == preset
+        assert get_spec(f"dwn-jsc-{tier}").datapath == "fused-packed"
+        assert get_spec(f"dwn-jsc-{tier}-xla").datapath == "packed-xla"
+    assert get_spec("dwn-jsc-sm-gaussian").placement == "gaussian"
+    with pytest.raises(KeyError, match="unknown DWN spec preset"):
+        get_spec("dwn-jsc-xxl")
+
+
+def test_resolve_spec_normalizes_legacy_archs():
+    from repro.configs import get_arch
+    # dryrun-only datapaths fall back to fused-packed exactly like the
+    # engine's pre-spec behavior; grouping survives
+    spec = resolve_spec(get_arch("dwn-jsc-lg2400-opt2"))
+    assert spec.preset == "lg-2400"
+    assert spec.datapath == "fused-packed"
+    assert spec.grouping == "strided"
+    # name resolution prefers the registered preset
+    assert resolve_spec("dwn-jsc-sm-xla").datapath == "packed-xla"
+    assert not has_spec("dwn-jsc-sm50")                  # arch, not preset
+    assert resolve_spec("dwn-jsc-sm50").preset == "sm-50"
+
+
+# ---------------------------------------------------------------------------
+# lifecycle ordering
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_order_enforced(data):
+    spec = DWNSpec(preset="sm-10", bits=32)
+    art = DWNArtifact(spec)
+    assert art.stage == "spec"
+    with pytest.raises(LifecycleError, match="call train\\(\\)/fit"):
+        art.freeze()
+    with pytest.raises(LifecycleError, match="call freeze"):
+        art.pack()
+    art.fit(data.x_train)
+    assert art.stage == "trained"
+    with pytest.raises(LifecycleError, match="call pack"):
+        art.serving_model()
+    with pytest.raises(LifecycleError):
+        art.hw_report()
+    art.freeze()
+    assert art.stage == "frozen"
+    art.pack()
+    assert art.stage == "packed"
+    # re-adopting invalidates downstream stages
+    art.adopt(art.params, art.buffers)
+    assert art.stage == "trained"
+
+
+# ---------------------------------------------------------------------------
+# bit-exact parity vs the pre-refactor glue (the deprecated shims)
+# ---------------------------------------------------------------------------
+
+def test_build_dwn_model_shim_bit_exact(data):
+    from repro.configs import get_arch
+    from repro.serving.backends import build_dwn_model
+    cfg = get_arch("dwn-jsc-sm")
+    with pytest.deprecated_call():
+        old = build_dwn_model(cfg, data.x_train, seed=0)
+    new = (DWNArtifact(get_spec("dwn-jsc-sm")).fit(data.x_train, seed=0)
+           .freeze().pack().serving_model())
+    assert np.array_equal(np.asarray(old.thresholds),
+                          np.asarray(new.thresholds))
+    for a, b in zip(old.mappings, new.mappings):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(old.tables, new.tables):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # packed serve outputs are identical through both bundles
+    from repro.core.model import apply_hard_packed
+    import jax.numpy as jnp
+    x = jnp.asarray(data.x_test[:32])
+    assert np.array_equal(np.asarray(apply_hard_packed(old.frozen, x)),
+                          np.asarray(apply_hard_packed(new.frozen, x)))
+
+
+def test_sweep_arch_shim_delegates():
+    from repro.configs.dwn_jsc import sweep_arch
+    with pytest.deprecated_call():
+        cfg = sweep_arch("sm-10", bits=64, placement="uniform",
+                         datapath="packed-xla")
+    spec = DWNSpec(preset="sm-10", bits=64, placement="uniform",
+                   datapath="packed-xla")
+    view = spec.arch_config()
+    assert (cfg.dwn_luts, cfg.dwn_bits, cfg.dwn_encoding,
+            cfg.dwn_datapath) == (view.dwn_luts, view.dwn_bits,
+                                  view.dwn_encoding, view.dwn_datapath)
+    assert cfg.family == view.family == "dwn"
+
+
+def test_engine_legacy_arch_and_spec_serve_identically():
+    from repro.serving import ServingEngine
+    kw = dict(max_bucket=32, min_bucket=8, n_train=256, seed=0)
+    e_old = ServingEngine("dwn-jsc-sm", **kw)          # legacy arch string
+    e_new = ServingEngine(get_spec("dwn-jsc-sm"), **kw)  # typed spec
+    for e in (e_old, e_new):
+        e.submit(e.make_request(32, seed=7))
+    r_old = e_old.drain()[0].result
+    r_new = e_new.drain()[0].result
+    assert np.array_equal(r_old[0], r_new[0])          # counts
+    assert np.array_equal(r_old[1], r_new[1])          # predictions
+    assert e_old.spec == e_new.spec
+
+
+def test_hw_report_artifact_matches_explicit_args(data):
+    from repro.hw.cost import dwn_hw_report
+    spec = DWNSpec(preset="sm-50", variant="PEN", bits=64, input_bits=6)
+    art = DWNArtifact(spec).fit(data.x_train).freeze()
+    r1 = art.hw_report()
+    r2 = dwn_hw_report(art)
+    r3 = dwn_hw_report(art.frozen, variant="PEN", name="sm-50",
+                       input_bits=6)
+    assert r1.luts == r2.luts == r3.luts
+    assert r1.total_luts == r3.total_luts
+    assert r1.total_ffs == r3.total_ffs
+    with pytest.raises(TypeError, match="variant"):
+        dwn_hw_report(art.frozen)
+    with pytest.raises(ValueError, match="freeze"):
+        dwn_hw_report(DWNArtifact(spec).fit(data.x_train))
+
+
+def test_table1_ten_luts_through_artifact_api(data):
+    """Table I TEN LUT counts stay within the documented tolerances when
+    regenerated purely through the spec → artifact route."""
+    from repro.hw.report import PAPER_TABLE3
+    from repro.sweep.artifacts import TABLE1_TEN_TOLERANCE
+    for preset, tol in TABLE1_TEN_TOLERANCE.items():
+        art = DWNArtifact(DWNSpec(preset=preset)).fit(data.x_train).freeze()
+        rep = art.hw_report()
+        paper = PAPER_TABLE3[preset]["ten_luts"]
+        err = abs(rep.total_luts - paper) / paper
+        assert err <= tol, (preset, rep.total_luts, paper)
+        assert rep.luts["encoder"] == 0                  # TEN: no encoder
+
+
+def test_verilog_accepts_artifact(data):
+    from repro.hw.verilog import emit_dwn, well_formed
+    art = DWNArtifact(DWNSpec(preset="sm-10", bits=32)).fit(
+        data.x_train).freeze()
+    src_art = emit_dwn(art, name="m")
+    src_frozen = emit_dwn(art.frozen, name="m")
+    assert src_art == src_frozen == art.verilog(name="m")
+    assert well_formed(src_art)
+    with pytest.raises(ValueError, match="freeze"):
+        emit_dwn(DWNArtifact(DWNSpec(preset="sm-10")))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint roundtrip (runtime.checkpoint integration)
+# ---------------------------------------------------------------------------
+
+def _packed_xla_outputs(art, x):
+    from repro.serving.backends import BoundBackend, get_backend
+    counts, pred = BoundBackend(get_backend("packed-xla"),
+                                art.serving_model())(np.asarray(x))
+    return np.asarray(counts), np.asarray(pred)
+
+
+def test_artifact_checkpoint_roundtrip_bit_exact(tmp_path, data):
+    spec = DWNSpec(preset="sm-10", variant="PEN", bits=32, input_bits=5)
+    art = DWNArtifact(spec).train(data, epochs=1, batch=64).freeze().pack()
+    art.save(tmp_path)
+    art2 = DWNArtifact.load(tmp_path)
+    assert art2.spec == spec
+    assert art2.stage == "packed"
+    assert art2.calibration["epochs"] == 1
+    c1, p1 = _packed_xla_outputs(art, data.x_test[:32])
+    c2, p2 = _packed_xla_outputs(art2, data.x_test[:32])
+    assert np.array_equal(c1, c2) and np.array_equal(p1, p2)
+    # trained params survive too (a reloaded artifact can keep training)
+    import jax
+    for (k, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(art.params)[0],
+            jax.tree_util.tree_flatten_with_path(art2.params)[0]):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), k
+
+
+def test_checkpoint_functions_in_runtime_module(tmp_path, data):
+    from repro.runtime.checkpoint import load_artifact, save_artifact
+    art = DWNArtifact(DWNSpec(preset="sm-10", bits=16)).fit(
+        data.x_train).freeze()
+    save_artifact(tmp_path, art)
+    art2 = load_artifact(tmp_path)
+    assert art2.stage == "frozen"
+    assert np.array_equal(art2.frozen.thresholds, art.frozen.thresholds)
+    with pytest.raises(FileNotFoundError):
+        load_artifact(tmp_path / "empty")
+    # a non-artifact checkpoint is refused, not misparsed
+    from repro.runtime import checkpoint
+    checkpoint.save(tmp_path / "raw", 0, {"w": np.zeros(3)})
+    with pytest.raises(ValueError, match="not a DWN artifact"):
+        load_artifact(tmp_path / "raw")
+
+
+# ---------------------------------------------------------------------------
+# smoke CLI (the CI lifecycle gate)
+# ---------------------------------------------------------------------------
+
+def test_smoke_cli_end_to_end(tmp_path):
+    from repro.dwn.smoke import main
+    out = tmp_path / "artifact.json"
+    rc = main(["--preset", "sm-10", "--variant", "TEN", "--bits", "32",
+               "--epochs", "0", "--n-train", "256", "--n-test", "64",
+               "--ckpt-dir", str(tmp_path / "ckpt"), "--out", str(out),
+               "--quiet"])
+    assert rc == 0
+    rec = json.loads(out.read_text())
+    assert rec["roundtrip_bit_exact"] is True
+    assert rec["stage"] == rec["reloaded_stage"] == "packed"
+    assert rec["hw"]["total_luts"] > 0
+
+
+# ---------------------------------------------------------------------------
+# sweep integration: one artifact per point, spec-covering cache
+# ---------------------------------------------------------------------------
+
+def test_sweep_runner_builds_one_artifact_per_point():
+    from repro.sweep import SweepSettings
+    from repro.sweep.grid import SweepPoint
+    from repro.sweep.pipeline import SweepRunner
+    runner = SweepRunner(SweepSettings(n_train=256, n_test=64,
+                                       kernel=False, serve=False))
+    ten = SweepPoint("sm-10", "TEN", bits=32)
+    pen = SweepPoint("sm-10", "PEN", bits=32, input_bits=5)
+    a_ten, a_pen = runner.artifact_for(ten), runner.artifact_for(pen)
+    assert a_ten is runner.artifact_for(ten)             # memoized
+    assert a_ten is not a_pen
+    # the paper's weight sharing: same trained params object across
+    # TEN/PEN variants, different frozen operating points
+    assert a_ten.params is a_pen.params
+    assert a_ten.frozen.input_frac_bits is None
+    assert a_pen.frozen.input_frac_bits == 4
+    assert a_pen.spec.input_bits == 5
+
+
+def test_sweep_cache_fingerprint_covers_dwn_package(tmp_path, monkeypatch):
+    """Editing the repro.dwn source must invalidate sweep cache keys."""
+    import repro.dwn.artifact as artifact_mod
+    from repro.sweep import cache as sweep_cache
+    monkeypatch.setattr(sweep_cache, "_FINGERPRINT", None)
+    fp1 = sweep_cache._code_fingerprint()
+    fake = tmp_path / "artifact.py"
+    fake.write_text("# edited lifecycle semantics\n")
+    monkeypatch.setattr(artifact_mod, "__file__", str(fake))
+    fp2 = sweep_cache._code_fingerprint()
+    assert fp1 != fp2

@@ -155,12 +155,16 @@ def test_norm_ppf_matches_known_quantiles():
 
 
 def test_sweep_arch_threads_encoding_into_serving_model():
+    # both entry points are deprecated shims over repro.dwn now, but must
+    # keep threading the encoding axis exactly as before
     from repro.configs.dwn_jsc import sweep_arch
     from repro.serving.backends import build_dwn_model
     from repro.data.jsc import load_jsc
-    cfg = sweep_arch("sm-10", bits=64, placement="gaussian")
+    with pytest.deprecated_call():
+        cfg = sweep_arch("sm-10", bits=64, placement="gaussian")
     assert cfg.dwn_bits == 64 and cfg.dwn_encoding == "gaussian"
     data = load_jsc(256, 64)
-    model = build_dwn_model(cfg, data.x_train)
+    with pytest.deprecated_call():
+        model = build_dwn_model(cfg, data.x_train)
     assert model.dcfg.encoding == "gaussian"
     assert model.thresholds.shape == (16, 64)
