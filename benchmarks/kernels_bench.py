@@ -7,14 +7,19 @@ Two datapaths at the paper's lg-2400 scale (B=1024, F=16, T=200, m=2400):
   -> popcount, staged through HBM, plus the float fused kernel;
 * packed: every bit lives in uint32 words (32/word) — packed encode ->
   shift/AND LUT eval -> SWAR popcount, plus the fused packed kernel that
-  keeps the words VMEM-resident end-to-end.
+  keeps the words VMEM-resident end-to-end, in both its ``packed``
+  (full bit tensor) and ``batch-major`` (direct-wire) variants.
 
 Timings (warmed, so compile time is excluded) and the packed-vs-float
 speedups are written to ``BENCH_kernels.json`` at the repo root (one
 record per run, overwritten).
+
+``--smoke-bm`` runs the batch-major bit-exactness smoke instead (all
+three JSC preset widths + a ragged batch), used as a fast CI gate.
 """
 
 import json
+import sys
 
 from .common import csv_row, Timer, ROOT
 
@@ -23,17 +28,48 @@ BENCH_JSON = ROOT / "BENCH_kernels.json"
 
 def _timed(fn):
     """(us, result) of one warmed call: run once to compile, then time."""
-    fn().block_until_ready()
+    import jax
+    jax.block_until_ready(fn())
     with Timer() as t:
         out = fn()
-        out.block_until_ready()
+        jax.block_until_ready(out)
     return t.us, out
+
+
+def smoke_bm():
+    """Batch-major bit-exactness smoke: all three JSC preset LUT widths
+    (plus a ragged, non-power-of-two batch) against the packed oracle."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.autotune import FusedConfig
+    from repro.kernels.fused import ops as f_ops
+
+    F, T, n, C = 16, 200, 6, 5
+    for m, B in ((50, 64), (360, 37), (2400, 128)):
+        key = jax.random.PRNGKey(m)
+        kx, kt, km, kl = jax.random.split(key, 4)
+        x = jax.random.uniform(kx, (B, F), minval=-1, maxval=1)
+        th = jnp.sort(jax.random.uniform(kt, (F, T), minval=-1, maxval=1), 1)
+        mapping = jax.random.randint(km, (m, n), 0, F * T)
+        tables = jax.random.randint(kl, (m, 64), 0, 2).astype(jnp.int32)
+        ref_counts, ref_idx = f_ops.fused_dwn_packed_ref(
+            x, th, [mapping], [tables], C)
+        counts, idx = f_ops.forward_packed(
+            x, th, mapping, tables, C, interpret=True,
+            config=FusedConfig(variant="batch-major", block_b=64))
+        np.testing.assert_array_equal(np.asarray(counts),
+                                      np.asarray(ref_counts))
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_idx))
+        print(f"smoke-bm ok: m={m} B={B}")
+    print("batch-major bit-exact on all preset widths")
 
 
 def run():
     import jax
     import jax.numpy as jnp
     import numpy as np
+    from repro.kernels.autotune import FusedConfig
     from repro.kernels.thermometer import ops as th_ops
     from repro.kernels.lut_eval import ops as lut_ops
     from repro.kernels.popcount import ops as pc_ops
@@ -56,7 +92,7 @@ def run():
     t_fused_f, fused_f = _timed(lambda: f_ops.forward(x, th, mapping,
                                                       tables_f, C,
                                                       interpret=True))
-    np.testing.assert_allclose(np.asarray(fused_f), np.asarray(counts),
+    np.testing.assert_allclose(np.asarray(fused_f[0]), np.asarray(counts),
                                atol=1e-4)
 
     # ---- packed pipeline -------------------------------------------------
@@ -72,6 +108,14 @@ def run():
     t_fused_p, fused_p = _timed(lambda: f_ops.forward_packed(
         x, th, mapping, tables_i, C, interpret=True)[0])
     np.testing.assert_array_equal(np.asarray(fused_p), np.asarray(counts))
+
+    # batch-major variant at the same scale (rows-per-step = 256, the
+    # default the autotuner sweeps around)
+    fwd_bm = f_ops.make_forward_packed(
+        th, mapping, tables_i, C, interpret=True,
+        config=FusedConfig(variant="batch-major", block_b=256))
+    t_fused_bm, fused_bm = _timed(lambda: fwd_bm(x)[0])
+    np.testing.assert_array_equal(np.asarray(fused_bm), np.asarray(counts))
 
     # ---- HBM traffic model ----------------------------------------------
     # float staged writes + re-reads the unary blow-up at 4 B/bit; packed
@@ -100,6 +144,9 @@ def run():
     csv_row("kernels/fused_packed", t_fused_p,
             f"vs_float_staged={staged_total_f / t_fused_p:.1f}x;"
             f"vs_float_fused={t_fused_f / t_fused_p:.1f}x")
+    csv_row("kernels/fused_batch_major", t_fused_bm,
+            f"vs_packed={t_fused_p / t_fused_bm:.1f}x;"
+            f"vs_float_fused={t_fused_f / t_fused_bm:.1f}x")
 
     record = {
         "scale": {"B": B, "F": F, "T": T, "m": m, "classes": C},
@@ -110,11 +157,13 @@ def run():
         "packed_us": {"encode": round(t_enc_p, 1),
                       "lut_eval": round(t_lut_p, 1),
                       "popcount": round(t_pop_p, 1),
-                      "fused": round(t_fused_p, 1)},
+                      "fused": round(t_fused_p, 1),
+                      "fused_batch_major": round(t_fused_bm, 1)},
         "speedup": {
             "fused_packed_vs_float_staged":
                 round(staged_total_f / t_fused_p, 2),
             "fused_packed_vs_float_fused": round(t_fused_f / t_fused_p, 2),
+            "fused_batch_major_vs_packed": round(t_fused_p / t_fused_bm, 2),
             "encode_packed_vs_float": round(t_enc / t_enc_p, 2),
         },
         "hbm_model_bytes": {"float_staged": staged_f,
@@ -126,9 +175,13 @@ def run():
     print(f"\npacked fused vs float staged pipeline: "
           f"{staged_total_f / t_fused_p:.1f}x wall-clock "
           f"({staged_total_f / 1e3:.1f} ms -> {t_fused_p / 1e3:.2f} ms per "
-          f"{B}-sample batch); bit widths: {bits_f32 / 1e6:.1f} MB float "
+          f"{B}-sample batch); batch-major fused {t_fused_bm / 1e3:.2f} ms; "
+          f"bit widths: {bits_f32 / 1e6:.1f} MB float "
           f"-> {bits_pack / 1e6:.2f} MB packed; written {BENCH_JSON.name}")
 
 
 if __name__ == "__main__":
-    run()
+    if "--smoke-bm" in sys.argv[1:]:
+        smoke_bm()
+    else:
+        run()

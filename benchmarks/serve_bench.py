@@ -6,14 +6,26 @@ and records throughput and p50/p99 total latency to ``BENCH_serve.json``
 at the repo root (one record per run, overwritten) — the serving-level
 companion of ``BENCH_kernels.json``.
 
+The engine starts with ``backend="auto"`` and autotuning on, so the
+fused-packed rows run the *tuned* kernel config for each bucket (variant
++ rows-per-step from the persistent autotune cache, docs/autotune.md);
+the chosen config is recorded per cell.
+
 Per backend the engine first serves one warmup request so the
 per-(backend, bucket) compile is excluded from the timed stream, matching
 how a long-running server amortizes compiles.  Wall times on CPU are the
 interpret-mode emulation for the Pallas backend; the cross-backend
 *ordering* (packed vs float) is the TPU-relevant signal.
+
+Regression gate: every cell is compared against the committed
+``BENCH_serve.json``; if any *previously-winning* backend regresses by
+more than 15% throughput, the bench exits non-zero (set
+``SERVE_BENCH_NO_GATE=1`` to record without gating, e.g. when moving the
+baseline to new hardware).
 """
 
 import json
+import os
 import time
 
 from .common import csv_row, ROOT
@@ -21,80 +33,136 @@ from .common import csv_row, ROOT
 BENCH_JSON = ROOT / "BENCH_serve.json"
 
 PRESETS = ("dwn-jsc-sm", "dwn-jsc-md", "dwn-jsc-lg")
-REQUESTS = 4
+REQUESTS = 32
 BATCH = 64
+REGRESSION_PCT = 15.0
+
+
+def _stream(engine, rng_seed=0):
+    """Serve the seeded REQUESTS x BATCH stream; returns (thru, lat)."""
+    import numpy as np
+    from repro.serving.scheduler import latency_stats
+    rng = np.random.default_rng(rng_seed)
+    t0 = time.perf_counter()
+    for _ in range(REQUESTS):
+        engine.submit(engine.make_request(
+            BATCH, seed=int(rng.integers(2**31))))
+    done = engine.drain()
+    wall = time.perf_counter() - t0
+    served = sum(r.size for r in done)
+    # compute_ms = datapath latency per step; queue wait is an
+    # artifact of pre-submitting the whole stream
+    lat = latency_stats(done)["compute_ms"]
+    return round(served / wall, 1), lat
+
+
+def _load_baseline():
+    try:
+        with open(BENCH_JSON) as fh:
+            return json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _regression_block(record, baseline):
+    """Compare each cell vs the committed record; flag >15% throughput
+    drops of any previously-winning backend."""
+    block = {"threshold_pct": REGRESSION_PCT, "cells": [], "failed": []}
+    if not baseline:
+        return block
+    for preset, old in baseline.get("presets", {}).items():
+        new = record["presets"].get(preset)
+        old_backends = old.get("backends", {})
+        if not new or not old_backends:
+            continue
+        winner = max(old_backends,
+                     key=lambda b: old_backends[b].get(
+                         "throughput_samples_per_s", 0.0))
+        old_thru = old_backends[winner]["throughput_samples_per_s"]
+        new_thru = new["backends"].get(winner, {}).get(
+            "throughput_samples_per_s", 0.0)
+        regressed = new_thru < old_thru * (1 - REGRESSION_PCT / 100)
+        cell = {"preset": preset, "backend": winner,
+                "baseline_throughput": old_thru,
+                "throughput": new_thru,
+                "delta_pct": round((new_thru / old_thru - 1) * 100, 1)
+                if old_thru else 0.0,
+                "regressed": regressed}
+        block["cells"].append(cell)
+        if regressed:
+            block["failed"].append(f"{preset}/{winner}")
+    return block
 
 
 def run():
-    import numpy as np
     from repro.serving import ServingEngine, available_backends
-    from repro.serving.scheduler import latency_stats
 
+    baseline = _load_baseline()
     record = {"stream": {"requests": REQUESTS, "batch": BATCH},
               "presets": {}}
     for preset in PRESETS:
+        # backend="auto" + autotune=True: startup tunes the fused kernel
+        # per bucket and calibrates every bit-exact backend, so the
+        # per-backend rows below all serve their steady-state best
         engine = ServingEngine(preset, max_bucket=BATCH, min_bucket=8,
-                               n_train=2000, verify=True)
+                               n_train=2000, verify=True, backend="auto",
+                               autotune=True)
+        tuned = {int(b): cfg.to_dict()
+                 for b, cfg in engine.tuned_configs.items()}
         per_backend = {}
         for backend in available_backends():
             engine.use_backend(backend)
             # compile the (backend, BATCH) bucket outside timing
             engine.warmup(BATCH)
-            rng = np.random.default_rng(0)
-            t0 = time.perf_counter()
-            for _ in range(REQUESTS):
-                engine.submit(engine.make_request(
-                    BATCH, seed=int(rng.integers(2**31))))
-            done = engine.drain()
-            wall = time.perf_counter() - t0
-            served = sum(r.size for r in done)
-            # compute_ms = datapath latency per step; queue wait is an
-            # artifact of pre-submitting the whole stream
-            lat = latency_stats(done)["compute_ms"]
+            thru, lat = _stream(engine)
             per_backend[backend] = {
-                "throughput_samples_per_s": round(served / wall, 1),
+                "throughput_samples_per_s": thru,
                 "latency_ms_p50": lat["p50"],
                 "latency_ms_p99": lat["p99"],
             }
+            if backend == "fused-packed":
+                per_backend[backend]["config"] = tuned.get(BATCH)
             csv_row(f"serve/{preset}/{backend}",
                     lat["p50"] * 1e3,
-                    f"thru={per_backend[backend]['throughput_samples_per_s']}"
-                    f";p99_ms={lat['p99']}")
+                    f"thru={thru};p99_ms={lat['p99']}")
         # auto-select row: per-bucket calibration picks the fastest
-        # bit-exact backend (BENCH history shows the winner is
-        # size-dependent: float-oracle on sm, packed paths on md/lg)
+        # bit-exact backend serving its tuned kernel config
         engine.use_backend("auto")
         engine.warmup(BATCH)
-        rng = np.random.default_rng(0)
-        t0 = time.perf_counter()
-        for _ in range(REQUESTS):
-            engine.submit(engine.make_request(
-                BATCH, seed=int(rng.integers(2**31))))
-        done = engine.drain()
-        wall = time.perf_counter() - t0
-        served = sum(r.size for r in done)
-        lat = latency_stats(done)["compute_ms"]
+        thru, lat = _stream(engine)
         auto_row = {
-            "throughput_samples_per_s": round(served / wall, 1),
+            "throughput_samples_per_s": thru,
             "latency_ms_p50": lat["p50"],
             "latency_ms_p99": lat["p99"],
             "choice": dict(engine.auto.choice),
+            "configs": {b: (cfg.to_dict() if cfg else None)
+                        for b, cfg in engine.auto.configs.items()},
         }
         csv_row(f"serve/{preset}/auto", lat["p50"] * 1e3,
-                f"thru={auto_row['throughput_samples_per_s']}"
-                f";choice={engine.auto.choice}")
+                f"thru={thru};choice={engine.auto.choice}")
         record["presets"][preset] = {
             "luts": engine.cfg.dwn_luts,
             "bit_exact_vs_oracle": engine.bit_exact,
+            "autotune": tuned,
             "backends": per_backend,
             "auto": auto_row,
         }
 
+    record["regression"] = _regression_block(record, baseline)
     with open(BENCH_JSON, "w") as fh:
         json.dump(record, fh, indent=2)
     print(f"\nwritten {BENCH_JSON.name}: "
           f"{len(PRESETS)} presets x {len(record['presets'][PRESETS[0]]['backends'])} "
           f"backends, {REQUESTS}x{BATCH} samples each")
+    failed = record["regression"]["failed"]
+    if failed:
+        msg = (f"serve bench regression gate: previously-winning backends "
+               f"dropped >{REGRESSION_PCT:.0f}% throughput: {failed}")
+        if os.environ.get("SERVE_BENCH_NO_GATE") == "1":
+            print(f"WARNING (gate disabled): {msg}")
+        else:
+            print(f"ERROR: {msg}")
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -4,12 +4,35 @@ The paper's central finding is that thermometer *encoding* dominates
 small-model hardware cost.  On TPU the same phenomenon appears as a
 memory-bound unary blow-up: encoding inflates a (B, 16) feature tile into
 a (B, 3200) bit tensor (x200 bytes) that a staged implementation writes
-to and re-reads from HBM.  This kernel keeps the bits in VMEM for their
-entire life: encode -> selection matmul (MXU) -> corner-product table
-eval (VPU) -> per-class popcount, emitting only the (B, classes) counts.
+to and re-reads from HBM.  These kernels keep the bits in VMEM for their
+entire life; three variants trade off how the bits are materialized:
 
-Grid: (B / B_blk, m / m_blk); the m axis is the innermost (sequential)
-loop and accumulates partial class counts into the same output block.
+``fused_dwn``
+    float datapath: encode -> selection matmul (MXU) -> corner-product
+    table eval (VPU) -> per-class popcount.  Grid (B/bb, m/bm); the m
+    axis is the innermost (sequential) loop accumulating partial class
+    counts, and the first-argmax prediction is emitted in-kernel on the
+    last m step.
+
+``fused_dwn_packed``
+    packed datapath: the encode compare packs straight to uint32 words
+    in VMEM, every LUT layer is gather + shift/AND addressing, and the
+    classifier is a masked SWAR popcount.  Grid over sample tiles only.
+
+``fused_dwn_batch_major``
+    batch-major direct-wire datapath: the first LUT layer reads only
+    m*n of the F*T thermometer bits, so for small models materializing
+    (let alone packing) the full bit tensor is pure overhead.  This
+    variant gathers the *features and thresholds of the wired bits* and
+    compares exactly those — one grid step processes a whole
+    (rows x bucket) sample tile with the entire model state VMEM-
+    resident.  Single-layer models (all JSC presets) never touch a
+    packed word at all; deeper stacks pack the first layer's outputs
+    and continue on the packed datapath.
+
+Every wrapper pads the batch internally to a block multiple and masks /
+slices the tail, so any batch size works without caller-side bucket
+rounding (the old ``B % bb == 0`` hard asserts are gone).
 """
 
 from __future__ import annotations
@@ -26,8 +49,18 @@ from ..thermometer.kernel import _pack_words
 from ..popcount.kernel import _first_argmax
 
 
-def _fused_kernel(x_ref, th_ref, sel_ref, tab_ref, cls_ref, counts_ref, *,
-                  fan_in: int):
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _row_mask(i, rows: int, total_b: int):
+    """(rows, 1) bool: which rows of grid step ``i`` are real samples."""
+    r = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+    return (i * rows + r) < total_b
+
+
+def _fused_kernel(x_ref, th_ref, sel_ref, tab_ref, cls_ref, counts_ref,
+                  idx_ref, *, fan_in: int):
     j = pl.program_id(1)
     x = x_ref[...]                                    # (B_blk, F)
     th = th_ref[...]                                  # (F, T)
@@ -61,24 +94,35 @@ def _fused_kernel(x_ref, th_ref, sel_ref, tab_ref, cls_ref, counts_ref, *,
     def _acc():
         counts_ref[...] += partial
 
+    # the m loop is innermost/sequential, so once the last m block has
+    # accumulated, the counts block is final: emit the first-argmax
+    # prediction here instead of making every caller re-derive it
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit_idx():
+        idx_ref[...] = _first_argmax(counts_ref[...])[:, None]
+
 
 @functools.partial(jax.jit, static_argnames=("fan_in", "block_b", "block_m",
                                              "interpret"))
 def fused_dwn(x: jax.Array, thresholds: jax.Array, sel_onehot: jax.Array,
               tables: jax.Array, class_map: jax.Array, *, fan_in: int = 6,
               block_b: int = 256, block_m: int = 128,
-              interpret: bool = False) -> jax.Array:
+              interpret: bool = False):
     """x (B,F); thresholds (F,T); sel_onehot (F*T, m*n); tables (m, 2^n);
-    class_map (m, classes) one-hot -> counts (B, classes) f32."""
+    class_map (m, classes) one-hot -> (counts (B, classes) f32,
+    idx (B,) i32 first-argmax).  Any B works: the batch is padded
+    internally to a block multiple and the tail sliced off."""
     B, F = x.shape
     T = thresholds.shape[1]
     m, classes = class_map.shape
     A = 2 ** fan_in
     bb, bm = min(block_b, B), min(block_m, m)
-    assert B % bb == 0 and m % bm == 0, (B, m, bb, bm)
-    grid = (B // bb, m // bm)
+    assert m % bm == 0, (m, bm)
+    Bp = _round_up(B, bb)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+    grid = (Bp // bb, m // bm)
     kernel = functools.partial(_fused_kernel, fan_in=fan_in)
-    return pl.pallas_call(
+    counts, idx = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -88,13 +132,21 @@ def fused_dwn(x: jax.Array, thresholds: jax.Array, sel_onehot: jax.Array,
             pl.BlockSpec((bm, A), lambda i, j: (j, 0)),
             pl.BlockSpec((bm, classes), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((bb, classes), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, classes), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((bb, classes), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, classes), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        ],
         interpret=interpret,
-    )(x, thresholds, sel_onehot, tables, class_map)
+    )(xp, thresholds, sel_onehot, tables, class_map)
+    return counts[:B], idx[:B, 0]
 
 
-def _fused_packed_kernel(x_ref, th_ref, *refs, num_layers: int):
+def _fused_packed_kernel(x_ref, th_ref, *refs, num_layers: int,
+                         total_b: int):
     # refs: per layer (widx, boff, tab), then class masks, then the two
     # output refs appended by pallas_call (counts, idx).
     #
@@ -124,6 +176,10 @@ def _fused_packed_kernel(x_ref, th_ref, *refs, num_layers: int):
         words = _pack_words(out_bits, B_blk)
     mask = cls_ref[...]                              # (classes, W)
     counts = masked_group_counts(words, mask)
+    # masked popcount tail: internally-padded rows emit zero counts
+    # (and idx 0) instead of whatever the zero-padded features encode to
+    counts = jnp.where(_row_mask(pl.program_id(0), B_blk, total_b),
+                       counts, 0.0)
     counts_ref[...] = counts
     idx_ref[...] = _first_argmax(counts)[:, None]
 
@@ -139,7 +195,9 @@ def fused_dwn_packed(x: jax.Array, thresholds: jax.Array,
     x (B, F); thresholds (F, T) with F*T a 32-multiple; layer_arrays a
     flat tuple (widx_0, boff_0, tab_0, widx_1, ...) with every m_l a
     32-multiple; class_masks (classes, W_last) uint32.
-    Returns (counts (B, classes) f32, idx (B,) i32).
+    Returns (counts (B, classes) f32, idx (B,) i32).  Any B works: the
+    batch pads internally to a ``block_b`` multiple, padded rows popcount
+    to zero under the row mask, and the tail is sliced off.
     """
     B, F = x.shape
     T = thresholds.shape[1]
@@ -147,8 +205,10 @@ def fused_dwn_packed(x: jax.Array, thresholds: jax.Array,
     assert len(layer_arrays) == 3 * num_layers
     classes, W_last = class_masks.shape
     bb = min(block_b, B)
-    assert B % bb == 0, (B, bb)
-    kernel = functools.partial(_fused_packed_kernel, num_layers=num_layers)
+    Bp = _round_up(B, bb)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+    kernel = functools.partial(_fused_packed_kernel, num_layers=num_layers,
+                               total_b=B)
     in_specs = [
         pl.BlockSpec((bb, F), lambda i: (i, 0)),
         pl.BlockSpec((F, T), lambda i: (0, 0)),
@@ -159,16 +219,126 @@ def fused_dwn_packed(x: jax.Array, thresholds: jax.Array,
     in_specs.append(pl.BlockSpec((classes, W_last), lambda i: (0, 0)))
     counts, idx = pl.pallas_call(
         kernel,
-        grid=(B // bb,),
+        grid=(Bp // bb,),
         in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bb, classes), lambda i: (i, 0)),
             pl.BlockSpec((bb, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, classes), jnp.float32),
-            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Bp, classes), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(x, thresholds, *layer_arrays, class_masks)
-    return counts, idx[:, 0]
+    )(xp, thresholds, *layer_arrays, class_masks)
+    return counts[:B], idx[:B, 0]
+
+
+def _fused_bm_kernel(x_ref, wf_ref, wth_ref, tab0_ref, *refs,
+                     num_layers: int, num_classes: int, total_b: int):
+    # refs: per *extra* layer (widx, boff, tab), then class masks (only
+    # when num_layers > 1), then counts_ref, idx_ref.
+    k = 3 * (num_layers - 1)
+    counts_ref = refs[k + (1 if num_layers > 1 else 0)]
+    idx_ref = refs[k + (2 if num_layers > 1 else 1)]
+    x = x_ref[...]                                   # (rows, F)
+    rows = x.shape[0]
+    wf = wf_ref[...]                                 # (m0, n) i32 feature
+    wth = wth_ref[...]                               # (m0, n) f32 threshold
+    m0, n = wf.shape
+    # direct-wire encode: gather the wired feature per LUT input and
+    # compare against that wire's threshold — m0*n compares instead of
+    # F*T compares + a full pack + word addressing
+    xg = jnp.take(x, wf.reshape(-1), axis=-1)        # (rows, m0*n)
+    sel = (xg > wth.reshape(-1)[None]).astype(jnp.int32)
+    addr = lut_addresses(sel.reshape(rows, m0, n))   # (rows, m0)
+    tab0 = tab0_ref[...]                             # (m0, 2^n) i32
+    out_bits = jnp.take_along_axis(
+        jnp.broadcast_to(tab0[None], (rows,) + tab0.shape),
+        addr[..., None], axis=-1)[..., 0]            # (rows, m0) i32
+    if num_layers == 1:
+        # contiguous class groups (group_masks semantics): plain VPU
+        # group-sum, no packed word ever materialized
+        g = m0 // num_classes
+        counts = out_bits.reshape(rows, num_classes, g).sum(
+            axis=-1).astype(jnp.float32)
+    else:
+        words = _pack_words(out_bits, rows)
+        for l in range(num_layers - 1):
+            widx = refs[3 * l][...]
+            boff = refs[3 * l + 1][...]
+            tab = refs[3 * l + 2][...]
+            s = select_packed_bits(words, widx, boff)
+            a = lut_addresses(s)
+            ob = jnp.take_along_axis(
+                jnp.broadcast_to(tab[None], (rows,) + tab.shape),
+                a[..., None], axis=-1)[..., 0]
+            words = _pack_words(ob, rows)
+        counts = masked_group_counts(words, refs[k][...])
+    counts = jnp.where(_row_mask(pl.program_id(0), rows, total_b),
+                       counts, 0.0)
+    counts_ref[...] = counts
+    idx_ref[...] = _first_argmax(counts)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_layers", "num_classes",
+                                             "block_b", "interpret"))
+def fused_dwn_batch_major(x: jax.Array, wire_f: jax.Array,
+                          wire_th: jax.Array, table0: jax.Array,
+                          layer_arrays: tuple, class_masks, *,
+                          num_layers: int, num_classes: int,
+                          block_b: int = 256, interpret: bool = False):
+    """Batch-major direct-wire fused inference in ONE pallas_call.
+
+    x (B, F); wire_f / wire_th (m0, n): the feature index and threshold
+    value of every first-layer LUT input wire (``ops.py`` derives them
+    from ``mappings[0]`` and the threshold bank); table0 (m0, 2^n) i32.
+    ``layer_arrays`` holds (widx, boff, tab) triples for layers 1.. and
+    ``class_masks`` the (classes, W_last) uint32 masks — both empty/None
+    for single-layer models, where no packed word is ever built and no
+    32-multiple constraint exists.  Grid is over sample tiles only: one
+    step runs ``block_b`` samples through the whole model.  Returns
+    (counts (B, classes) f32, idx (B,) i32); any B works (internal pad +
+    row-masked popcount).
+    """
+    B, F = x.shape
+    m0, n = wire_f.shape
+    assert len(layer_arrays) == 3 * (num_layers - 1)
+    if num_layers == 1:
+        assert m0 % num_classes == 0, (m0, num_classes)
+    bb = min(block_b, B)
+    Bp = _round_up(B, bb)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+    kernel = functools.partial(_fused_bm_kernel, num_layers=num_layers,
+                               num_classes=num_classes, total_b=B)
+    A = table0.shape[1]
+    in_specs = [
+        pl.BlockSpec((bb, F), lambda i: (i, 0)),
+        pl.BlockSpec((m0, n), lambda i: (0, 0)),
+        pl.BlockSpec((m0, n), lambda i: (0, 0)),
+        pl.BlockSpec((m0, A), lambda i: (0, 0)),
+    ]
+    operands = [xp, wire_f, wire_th, table0]
+    for arr in layer_arrays:
+        in_specs.append(pl.BlockSpec(
+            arr.shape, lambda i, nd=arr.ndim: (0,) * nd))
+        operands.append(arr)
+    if num_layers > 1:
+        classes, W_last = class_masks.shape
+        in_specs.append(pl.BlockSpec((classes, W_last), lambda i: (0, 0)))
+        operands.append(class_masks)
+    counts, idx = pl.pallas_call(
+        kernel,
+        grid=(Bp // bb,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bb, num_classes), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, num_classes), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return counts[:B], idx[:B, 0]

@@ -1,4 +1,13 @@
-"""Public op wrapper for the fused DWN-accelerator kernel."""
+"""Public op wrappers for the fused DWN-accelerator kernels.
+
+``make_forward_packed`` is the serving entry point: it hoists all
+batch-independent operand prep out of the per-call path and returns a
+closure running one of the fused kernel variants.  Which variant and
+which block shapes come from an optional
+:class:`repro.kernels.autotune.FusedConfig` — the autotuner sweeps
+(variant, rows-per-step) per (spec, bucket, device) and persists the
+winner; with no config the historical defaults apply.
+"""
 
 from __future__ import annotations
 
@@ -8,7 +17,7 @@ import jax.numpy as jnp
 from ...core.bitpack import WORD_BITS, group_masks
 from ..lut_eval.ref import selection_onehot
 from ..lut_eval.ops import packed_wire_indices
-from .kernel import fused_dwn, fused_dwn_packed
+from .kernel import fused_dwn, fused_dwn_packed, fused_dwn_batch_major
 from .ref import fused_dwn_ref, fused_dwn_packed_ref
 
 
@@ -18,20 +27,25 @@ def _round_up(x: int, m: int) -> int:
 
 def forward(x: jax.Array, thresholds: jax.Array, mapping: jax.Array,
             tables: jax.Array, num_classes: int, *,
-            interpret: bool | None = None) -> jax.Array:
-    """Whole-accelerator DWN inference: features -> class counts."""
+            interpret: bool | None = None, config=None):
+    """Whole-accelerator DWN inference: features -> (counts, argmax).
+
+    The first-argmax prediction is emitted in-kernel (ties -> lower
+    class index), so callers never re-derive it.  ``config`` (a
+    ``FusedConfig``) overrides the (block_b, block_m) tile shapes.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     B, F = x.shape
     T = thresholds.shape[1]
     m, n = mapping.shape
     g = m // num_classes
+    block_b = config.block_b if config is not None else 256
+    block_m = config.block_m if config is not None else 128
     Tp = _round_up(T, 128)
-    bb = min(256, _round_up(B, 8))
-    Bp = _round_up(B, bb)
-    bm = min(128, _round_up(m, 8))
+    bb = min(block_b, _round_up(B, 8))
+    bm = min(block_m, _round_up(m, 8))
     mp = _round_up(m, bm)
-    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
     thp = jnp.pad(thresholds, ((0, 0), (0, Tp - T)), constant_values=jnp.inf)
     # selection over the padded bit layout (F, Tp)
     f_of = mapping // T
@@ -42,76 +56,123 @@ def forward(x: jax.Array, thresholds: jax.Array, mapping: jax.Array,
     tabs = jnp.pad(tables.astype(jnp.float32), ((0, mp - m), (0, 0)))
     cls = jax.nn.one_hot(jnp.arange(m) // g, num_classes, dtype=jnp.float32)
     cls = jnp.pad(cls, ((0, mp - m), (0, 0)))        # padded LUTs count 0
-    counts = fused_dwn(xp, thp, sel, tabs, cls, fan_in=n, block_b=bb,
-                       block_m=bm, interpret=interpret)
-    return counts[:B]
+    return fused_dwn(x, thp, sel, tabs, cls, fan_in=n, block_b=bb,
+                     block_m=bm, interpret=interpret)
+
+
+def _packed_layer_arrays(mappings, tables):
+    """32-multiple-padded (widx, boff, tab) triples (all-zero pad LUTs)."""
+    arrays = []
+    for mp_arr, tb in zip(mappings, tables):
+        m, n = mp_arr.shape
+        mp = _round_up(m, WORD_BITS)
+        widx, boff = packed_wire_indices(mp_arr)
+        arrays += [
+            jnp.pad(widx, ((0, mp - m), (0, 0))),
+            jnp.pad(boff, ((0, mp - m), (0, 0))),
+            jnp.pad(jnp.asarray(tb, jnp.int32), ((0, mp - m), (0, 0))),
+        ]
+    return tuple(arrays)
 
 
 def make_forward_packed(thresholds: jax.Array, mappings, tables,
                         num_classes: int, *,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None, config=None):
     """Build ``fn(x) -> (counts, argmax)`` with operand prep done once.
 
     Hoists everything batch-independent out of the per-call path: wire
-    indices, 32-multiple layer padding with all-zero LUTs, and the class
-    masks built from the *logical* final width so padding never
-    mis-counts.  The serving backends call this once per model and reuse
-    the closure across every batch bucket; ``forward_packed`` below stays
-    as the one-shot convenience wrapper.
+    indices, layer padding, class masks.  The serving backends call this
+    once per (model, tuned config) and reuse the closure across batches;
+    ``forward_packed`` below stays as the one-shot convenience wrapper.
 
-    Requires F*T to be a 32-multiple (true for all JSC presets: 16*200);
-    falls back to the jnp oracle otherwise.
+    Args:
+      config: optional ``repro.kernels.autotune.FusedConfig`` selecting
+        the kernel variant and rows-per-grid-step:
+
+        * ``variant="packed"`` (default): encode packs the full F*T bit
+          tensor to uint32 words in VMEM, then word-addressed LUT layers
+          and a masked SWAR popcount.  Requires F*T to be a 32-multiple
+          (true for all JSC presets: 16*200); falls back to the jnp
+          oracle otherwise.
+        * ``variant="batch-major"``: direct-wire first layer — only the
+          m*n wired bits are ever compared, single-layer models never
+          build a packed word, and the grid is over sample tiles only.
+          No F*T constraint.
+
+    Batches of any size work: the kernels pad internally and mask the
+    ragged tail, so callers need no bucket rounding.
     """
     if not isinstance(mappings, (list, tuple)):
         mappings, tables = [mappings], [tables]
     mappings, tables = list(mappings), list(tables)
     F, T = thresholds.shape
+    num_layers = len(mappings)
+    variant = config.variant if config is not None else "packed"
+    block_b = config.block_b if config is not None else 256
+
+    if variant == "batch-major":
+        m0, n = mappings[0].shape
+        mp0 = mappings[0]
+        # wire operands: the feature index and threshold value of every
+        # first-layer input wire (bit f*T + t  <=>  x[:, f] > th[f, t])
+        wire_f = jnp.asarray(mp0, jnp.int32) // T
+        wire_th = jnp.asarray(thresholds).reshape(-1)[
+            jnp.asarray(mp0, jnp.int32)]
+        tab0 = jnp.asarray(tables[0], jnp.int32)
+        if num_layers > 1:
+            # deeper stacks pack layer 0's outputs: pad m0 to a word
+            # multiple with wires that always read 0 (+inf thresholds,
+            # all-zero LUTs) so the zero-pad word invariant holds
+            mp = _round_up(m0, WORD_BITS)
+            wire_f = jnp.pad(wire_f, ((0, mp - m0), (0, 0)))
+            wire_th = jnp.pad(wire_th, ((0, mp - m0), (0, 0)),
+                              constant_values=jnp.inf)
+            tab0 = jnp.pad(tab0, ((0, mp - m0), (0, 0)))
+            rest = _packed_layer_arrays(mappings[1:], tables[1:])
+            masks = group_masks(mappings[-1].shape[0], num_classes)
+        else:
+            rest, masks = (), None
+
+        def fn(x: jax.Array):
+            interp = interpret
+            if interp is None:
+                interp = jax.default_backend() != "tpu"
+            return fused_dwn_batch_major(
+                x, wire_f, wire_th, tab0, rest, masks,
+                num_layers=num_layers, num_classes=num_classes,
+                block_b=block_b, interpret=interp)
+        return fn
+
     if (F * T) % WORD_BITS != 0:
         def fallback(x: jax.Array):
             return fused_dwn_packed_ref(x, thresholds, mappings, tables,
                                         num_classes)
         return fallback
 
-    layer_arrays = []
-    for mp_arr, tb in zip(mappings, tables):
-        m, n = mp_arr.shape
-        mp = _round_up(m, WORD_BITS)
-        widx, boff = packed_wire_indices(mp_arr)
-        layer_arrays += [
-            jnp.pad(widx, ((0, mp - m), (0, 0))),
-            jnp.pad(boff, ((0, mp - m), (0, 0))),
-            jnp.pad(jnp.asarray(tb, jnp.int32), ((0, mp - m), (0, 0))),
-        ]
-    layer_arrays = tuple(layer_arrays)
-    m_last = mappings[-1].shape[0]
-    masks = group_masks(m_last, num_classes)
-    num_layers = len(mappings)
+    layer_arrays = _packed_layer_arrays(mappings, tables)
+    masks = group_masks(mappings[-1].shape[0], num_classes)
 
     def fn(x: jax.Array):
         interp = interpret
         if interp is None:
             interp = jax.default_backend() != "tpu"
-        B = x.shape[0]
-        bb = min(256, _round_up(B, 8))
-        Bp = _round_up(B, bb)
-        xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
-        counts, idx = fused_dwn_packed(xp, thresholds, layer_arrays,
-                                       masks, num_layers=num_layers,
-                                       block_b=bb, interpret=interp)
-        return counts[:B], idx[:B]
+        return fused_dwn_packed(x, thresholds, layer_arrays, masks,
+                                num_layers=num_layers, block_b=block_b,
+                                interpret=interp)
     return fn
 
 
 def forward_packed(x: jax.Array, thresholds: jax.Array, mappings, tables,
-                   num_classes: int, *, interpret: bool | None = None):
+                   num_classes: int, *, interpret: bool | None = None,
+                   config=None):
     """Whole-accelerator packed DWN inference: features -> (counts, argmax).
 
     The serving fast path: one fused pallas_call runs encode -> every LUT
-    layer -> group popcount with all bit tensors packed uint32 and
-    VMEM-resident.  One-shot wrapper over :func:`make_forward_packed`.
+    layer -> group popcount with all bit tensors VMEM-resident.  One-shot
+    wrapper over :func:`make_forward_packed`.
     """
     return make_forward_packed(thresholds, mappings, tables, num_classes,
-                               interpret=interpret)(x)
+                               interpret=interpret, config=config)(x)
 
 
 __all__ = ["forward", "forward_packed", "make_forward_packed",

@@ -35,6 +35,7 @@ from ..configs.base import ArchConfig
 from ..core.classifier import predict
 from ..core.model import DWNConfig, FrozenDWN, apply_hard, apply_hard_packed
 from ..core.thermometer import quantize_fixed_point
+from ..kernels import autotune
 from ..kernels.fused import ops as fused_ops
 
 Array = jax.Array
@@ -58,6 +59,10 @@ class DWNModelBundle:
     thresholds: Array                 # (F, T)
     mappings: list                    # per layer (m, n) int32
     tables: list                      # per layer (m, 2^n) int32
+    #: bucket -> tuned fused-kernel config (``autotune_model`` fills it;
+    #: empty = every bucket serves on the default blocks).  Configs are
+    #: resolved at trace time, so tune *before* the first step compiles.
+    tuned_configs: dict = dataclasses.field(default_factory=dict)
 
     @property
     def num_classes(self) -> int:
@@ -135,20 +140,42 @@ def available_backends() -> list[str]:
 
 @register_backend
 class FusedPackedBackend(Backend):
-    """Fused Pallas kernel, bits packed uint32 end-to-end in VMEM."""
+    """Fused Pallas kernel, bits VMEM-resident end-to-end.
+
+    The kernel variant and rows-per-grid-step come from the model's
+    ``tuned_configs`` (per batch bucket, filled by
+    :func:`autotune_model`); buckets without a tuned entry serve on
+    ``autotune.DEFAULT_CONFIG``'s blocks.  The config is resolved at
+    trace time — ``BoundBackend`` jits once per bucket, so each bucket's
+    trace closes over its own config.
+    """
 
     name = "fused-packed"
 
     def make_step(self, model: DWNModelBundle) -> Callable:
-        fwd = fused_ops.make_forward_packed(
-            model.thresholds, model.mappings, model.tables,
-            model.num_classes)
+        fwd_cache: dict = {}
+
+        def fwd_for(config):
+            if config not in fwd_cache:
+                # fn() below runs inside a jit trace; without this guard
+                # omnistaging would stage the one-time operand prep into
+                # whichever bucket traces first and leak its tracers into
+                # the memoized closure
+                with jax.ensure_compile_time_eval():
+                    fwd_cache[config] = fused_ops.make_forward_packed(
+                        model.thresholds, model.mappings, model.tables,
+                        model.num_classes, config=config)
+            return fwd_cache[config]
+
         # PEN models quantize inputs to the (1, n) grid before the
         # comparator bank (apply_hard semantics); the fused kernel sees
         # already-quantized rows so it stays bit-exact vs the oracle.
         frac = model.frozen.input_frac_bits
 
         def fn(x: Array):
+            # x.shape[0] is static at trace time: per-bucket jit entries
+            # each bind their bucket's tuned config here
+            fwd = fwd_for(model.tuned_configs.get(x.shape[0]))
             if frac is not None:
                 x = quantize_fixed_point(x, frac)
             counts, pred = fwd(x)
@@ -248,17 +275,49 @@ def time_backend_step(bound: "BoundBackend", x: Array, *,
 
     The first (untimed) call warms the (backend, bucket) compile cache,
     so the measurement sees steady-state serving, exactly like a running
-    server would.
+    server would.  The timing loop itself is ``autotune.time_step`` —
+    the same machinery the kernel autotuner sweeps candidates with —
+    with a 1 ms accumulation floor so microsecond-scale steps (small
+    models, small buckets) are raced over enough reps to beat scheduler
+    jitter.
     """
-    import time
-    fn = bound.step_for(x.shape[0])
-    jax.block_until_ready(fn(x))
-    best = float("inf")
-    for _ in range(max(1, iters)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(x))
-        best = min(best, time.perf_counter() - t0)
-    return best
+    return autotune.time_step(bound.step_for(x.shape[0]), x, iters=iters,
+                              min_time_s=1e-3)
+
+
+def autotune_model(model: DWNModelBundle, buckets, x_probe, *,
+                   spec_fingerprint: str,
+                   cache: "autotune.AutotuneCache | None" = None,
+                   iters: int = 5, timer=None,
+                   force: bool = False) -> dict:
+    """Fill ``model.tuned_configs`` with the fastest fused config per
+    bucket (cache-hit first, timed sweep on miss).
+
+    Must run before the first fused step compiles: ``BoundBackend`` jits
+    one entry per bucket and each trace binds the config it sees then.
+
+    Args:
+      model: the served bundle; mutated in place.
+      buckets: bucket ladder to tune (e.g. ``scheduler.buckets``).
+      x_probe: (>= max(buckets), F) probe rows; each bucket tunes on its
+        leading slice.
+      spec_fingerprint: ``DWNSpec.fingerprint()`` — the cache identity.
+      cache / iters / timer / force: passed to ``autotune.tune_fused``.
+
+    Returns {bucket: FusedConfig} (also left on the model).
+    """
+    cache = cache if cache is not None else autotune.AutotuneCache()
+    kwargs = {} if timer is None else {"timer": timer}
+    for bucket in buckets:
+        cfg = autotune.tune_fused(
+            model.thresholds, model.mappings, model.tables,
+            model.num_classes, jnp.asarray(x_probe[:bucket]),
+            spec_fingerprint=spec_fingerprint,
+            input_frac_bits=model.frozen.input_frac_bits,
+            cache=cache, iters=iters, min_time_s=1e-3, force=force,
+            **kwargs)
+        model.tuned_configs[bucket] = cfg
+    return dict(model.tuned_configs)
 
 
 class AutoSelector:
@@ -276,20 +335,40 @@ class AutoSelector:
     fallback for selectors created mid-session via
     ``use_backend("auto")``.
 
+    Calibration consults the model's *tuned* fused configs, not just the
+    backend choice: ``autotune_model`` runs first, so the fused-packed
+    candidate being timed at each bucket is the autotuned variant/blocks
+    for that bucket, and ``configs`` records what was actually timed.
+
+    Near-ties break toward ``fused-packed``: at small buckets the real
+    spread between datapaths is a few microseconds — below the jitter of
+    the CPU interpret-mode emulation the timings run under — and the
+    fused kernel is the deployment-target path the emulation stands in
+    for.  A backend only displaces it by beating it past
+    ``tie_break_pct``.
+
     Attributes:
       choice: bucket -> winning backend name (filled by calibration).
       timings: bucket -> {backend: best step seconds} for reporting.
+      configs: bucket -> tuned ``FusedConfig`` in effect at calibration
+        time (None for untuned buckets).
     """
 
+    #: preferred backend on near-ties (the deployment-target kernel).
+    TIE_BREAK_BACKEND = "fused-packed"
+
     def __init__(self, backends: dict[str, "BoundBackend"],
-                 bit_exact: dict[str, bool], *, iters: int = 3):
+                 bit_exact: dict[str, bool], *, iters: int = 5,
+                 tie_break_pct: float = 10.0):
         self.backends = backends
         self.eligible = [name for name, b in backends.items()
                          if b.is_oracle or bit_exact.get(name, False)]
         assert self.eligible, "no bit-exact backend to select from"
         self.iters = iters
+        self.tie_break_pct = tie_break_pct
         self.choice: dict[int, str] = {}
         self.timings: dict[int, dict[str, float]] = {}
+        self.configs: dict[int, "autotune.FusedConfig | None"] = {}
 
     def calibrate(self, x: Array) -> str:
         """Time every eligible backend at x's bucket; returns the winner."""
@@ -298,8 +377,16 @@ class AutoSelector:
                                          iters=self.iters)
                  for name in self.eligible}
         self.timings[bucket] = times
-        self.choice[bucket] = min(times, key=times.get)
-        return self.choice[bucket]
+        best = min(times, key=times.get)
+        tb = self.TIE_BREAK_BACKEND
+        if (tb in times and tb != best
+                and times[tb] <= times[best]
+                * (1 + self.tie_break_pct / 100)):
+            best = tb
+        self.choice[bucket] = best
+        model = self.backends[best].model
+        self.configs[bucket] = model.tuned_configs.get(bucket)
+        return best
 
     def backend_for(self, x: Array) -> "BoundBackend":
         """The calibrated winner for x's bucket (calibrating on first
@@ -349,6 +436,7 @@ def verify_backends(model: DWNModelBundle,
 
 __all__ = [
     "AutoSelector", "Backend", "BoundBackend", "DWNModelBundle",
-    "available_backends", "build_dwn_model", "get_backend",
-    "register_backend", "time_backend_step", "verify_backends",
+    "autotune_model", "available_backends", "build_dwn_model",
+    "get_backend", "register_backend", "time_backend_step",
+    "verify_backends",
 ]

@@ -22,6 +22,7 @@ Usage:
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Any, Sequence
 
@@ -62,6 +63,12 @@ class ServingEngine:
         to single-device execution for that bucket).
       verify: run the startup bit-exactness cross-check of every
         registered non-oracle backend against the float oracle.
+      autotune: run the fused-kernel autotuner over the bucket ladder at
+        startup (``backends.autotune_model``): each bucket serves the
+        fastest (variant, rows-per-step) fused config, cache-hit from
+        the persistent config cache (docs/autotune.md) or timed once on
+        miss.  ``None`` (default) resolves to True exactly when
+        ``backend == "auto"``; ``REPRO_AUTOTUNE=0`` force-disables.
       reduced: LM archs: serve the tiny same-family variant.  DWN archs:
         kept for CLI symmetry (the model is never shrunk — the datapath
         is the thing being served; callers shrink the request volume).
@@ -73,6 +80,7 @@ class ServingEngine:
                  backend: str | None = None,
                  max_bucket: int = 256, min_bucket: int = 8,
                  data_parallel: bool = True, verify: bool = True,
+                 autotune: bool | None = None,
                  reduced: bool = False, n_train: int = 2000,
                  seed: int = 0, prompt_len: int = 32, gen: int = 16,
                  model_parallel: int = 1):
@@ -98,6 +106,8 @@ class ServingEngine:
         self.scheduler = MicrobatchScheduler(
             max_bucket=max_bucket, min_bucket=min(min_bucket, max_bucket))
         self.bit_exact: dict[str, bool] = {}
+        self.tuned_configs: dict = {}
+        self._autotune_arg = autotune
         self._drain_wall = 0.0
         self._lm_stats: list[tuple[float, float]] = []
         if self.family == "dwn":
@@ -143,6 +153,20 @@ class ServingEngine:
             backend = self.spec.datapath
         self.auto: AutoSelector | None = None
         probe = self.data.x_test[:self.scheduler.max_bucket]
+        do_tune = self._autotune_arg
+        if do_tune is None:
+            do_tune = backend == "auto"
+        if os.environ.get("REPRO_AUTOTUNE") == "0":
+            do_tune = False
+        if do_tune:
+            # tune BEFORE anything compiles: BoundBackend jits one entry
+            # per bucket and each trace binds the tuned config it sees.
+            # The startup verification below then cross-checks the tuned
+            # variant, not the default one.
+            from .backends import autotune_model
+            self.tuned_configs = autotune_model(
+                self.model, self.scheduler.buckets, probe,
+                spec_fingerprint=self.spec.fingerprint())
         if verify or backend == "auto":
             # probe at the largest bucket: the multi-block grid path that
             # serving actually uses is the one cross-checked, and the
@@ -163,6 +187,10 @@ class ServingEngine:
                 self.auto.choice[self.scheduler.max_bucket]]
         else:
             self.backend = self.backends[backend]
+        # survive use_backend() round-trips: pinning a backend then
+        # returning to "auto" restores this calibrated selector instead
+        # of re-timing the ladder
+        self._auto_saved = self.auto
 
     def _shard_wrap(self, fn, bucket: int):
         """shard_map a backend step over the ("data",) mesh for one bucket.
@@ -192,7 +220,10 @@ class ServingEngine:
         if name == "auto":
             if self.auto is None:
                 assert self.bit_exact, "auto-select needs verify=True"
-                self.auto = AutoSelector(self.backends, self.bit_exact)
+                saved = getattr(self, "_auto_saved", None)
+                self.auto = saved if saved is not None \
+                    else AutoSelector(self.backends, self.bit_exact)
+                self._auto_saved = self.auto
             return
         self.auto = None
         self.backend = self.backends[name]
@@ -380,9 +411,14 @@ class ServingEngine:
                 "spec_fingerprint": self.spec.fingerprint(),
                 "artifact_stage": self.artifact.stage,
             })
+            if self.tuned_configs:
+                out["autotune"] = {int(b): cfg.to_dict()
+                                   for b, cfg in self.tuned_configs.items()}
             if self.auto is not None:
                 out["auto"] = {
                     "choice": dict(self.auto.choice),
+                    "configs": {b: (cfg.to_dict() if cfg else None)
+                                for b, cfg in self.auto.configs.items()},
                     "timings_ms": {b: {n: round(t * 1e3, 3)
                                        for n, t in times.items()}
                                    for b, times in

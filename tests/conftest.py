@@ -4,6 +4,13 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Hermetic autotune: never read or write the user-level fused-kernel
+# config cache (~/.cache/repro/autotune) from the test suite.
+os.environ.setdefault(
+    "REPRO_AUTOTUNE_CACHE",
+    os.path.join(os.path.dirname(__file__), "..", ".pytest_cache",
+                 "autotune_cache.json"))
+
 # Property tests use `hypothesis` (declared in pyproject.toml). In offline
 # environments where it cannot be installed, register the deterministic shim
 # from tests/_hypothesis_shim.py under the same module name.

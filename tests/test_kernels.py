@@ -79,9 +79,13 @@ def test_fused_shapes(B, F, T, m):
     key = jax.random.PRNGKey(m)
     mapping = jax.random.randint(key, (m, 6), 0, F * T)
     tables = jax.random.randint(key, (m, 64), 0, 2).astype(jnp.float32)
-    out = f_ops.forward(x, th, mapping, tables, 5, interpret=True)
+    counts, idx = f_ops.forward(x, th, mapping, tables, 5, interpret=True)
     ref = fused_dwn_ref(x, th, mapping, tables, 5)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(ref),
+                               atol=1e-4)
+    # in-kernel first-argmax (ties -> lower class) == jnp.argmax semantics
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.asarray(jnp.argmax(ref, -1)))
 
 
 def test_fused_agrees_with_staged_pipeline():
@@ -91,9 +95,25 @@ def test_fused_agrees_with_staged_pipeline():
     mapping = jax.random.randint(key, (50, 6), 0, 3200)
     tables = jax.random.randint(key, (50, 64), 0, 2).astype(jnp.float32)
     bits = th_ops.encode(x, th, interpret=True)
-    stage = pc_ops.classify(
+    stage_counts, stage_idx = pc_ops.classify(
         lut_ops.evaluate(bits, mapping, tables, interpret=True), 5,
-        interpret=True)[0]
-    fused = f_ops.forward(x, th, mapping, tables, 5, interpret=True)
-    np.testing.assert_allclose(np.asarray(fused), np.asarray(stage),
+        interpret=True)
+    counts, idx = f_ops.forward(x, th, mapping, tables, 5, interpret=True)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(stage_counts),
+                               atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(stage_idx))
+
+
+@pytest.mark.parametrize("B", [13, 37, 64])
+def test_fused_ragged_batches_pad_internally(B):
+    """Any batch size works: the kernels pad B internally and mask the
+    ragged tail, so bucket rounding is not the caller's problem."""
+    x, th = _xth(B, 16, 200, seed=B)
+    key = jax.random.PRNGKey(B)
+    mapping = jax.random.randint(key, (50, 6), 0, 3200)
+    tables = jax.random.randint(key, (50, 64), 0, 2).astype(jnp.float32)
+    counts, idx = f_ops.forward(x, th, mapping, tables, 5, interpret=True)
+    assert counts.shape == (B, 5) and idx.shape == (B,)
+    ref = fused_dwn_ref(x, th, mapping, tables, 5)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(ref),
                                atol=1e-4)
