@@ -17,8 +17,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     from . import (table1_hardware, table2_literature, table3_quantization,
                    fig2_encoding, fig5_breakdown, fig6_pareto,
-                   roofline_report, kernels_bench, serve_bench, sweep_smoke,
-                   train_bench)
+                   roofline_report, kernels_bench, load_harness, serve_bench,
+                   sweep_smoke, train_bench)
     benches = {
         "table1": table1_hardware.run,
         "table2": table2_literature.run,
@@ -29,6 +29,7 @@ def main(argv=None):
         "roofline": roofline_report.run,
         "kernels": kernels_bench.run,
         "serve": serve_bench.run,
+        "load": load_harness.run,
         "sweep": sweep_smoke.run,
         "train": train_bench.run,
     }

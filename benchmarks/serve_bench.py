@@ -2,9 +2,14 @@
 
 Serves an identical, seeded request stream through every registered DWN
 datapath backend on each serving preset (sm/md/lg) via the ServingEngine,
-and records throughput and p50/p99 total latency to ``BENCH_serve.json``
-at the repo root (one record per run, overwritten) — the serving-level
-companion of ``BENCH_kernels.json``.
+and records throughput and p50/p99/p999 latency plus shed-rate and
+queue-depth fields to ``BENCH_serve.json`` at the repo root — the
+serving-level companion of ``BENCH_kernels.json``.  Rows share their
+metric names with the open-loop latency–throughput curve that
+``benchmarks/load_harness.py`` stores under ``"curve"`` in the same file
+(this bench preserves that section when it rewrites the record; the
+closed-loop rows here never shed, so their ``shed_rate`` is 0 by
+construction).
 
 The engine starts with ``backend="auto"`` and autotuning on, so the
 fused-packed rows run the *tuned* kernel config for each bucket (variant
@@ -119,6 +124,9 @@ def run():
                 "throughput_samples_per_s": thru,
                 "latency_ms_p50": lat["p50"],
                 "latency_ms_p99": lat["p99"],
+                "latency_ms_p999": lat["p999"],
+                "shed_rate": 0.0,
+                "queue_depth_max_requests": REQUESTS,
             }
             if backend == "fused-packed":
                 per_backend[backend]["config"] = tuned.get(BATCH)
@@ -134,6 +142,9 @@ def run():
             "throughput_samples_per_s": thru,
             "latency_ms_p50": lat["p50"],
             "latency_ms_p99": lat["p99"],
+            "latency_ms_p999": lat["p999"],
+            "shed_rate": 0.0,
+            "queue_depth_max_requests": REQUESTS,
             "choice": dict(engine.auto.choice),
             "configs": {b: (cfg.to_dict() if cfg else None)
                         for b, cfg in engine.auto.configs.items()},
@@ -149,6 +160,10 @@ def run():
         }
 
     record["regression"] = _regression_block(record, baseline)
+    if baseline and "curve" in baseline:
+        # the open-loop curve belongs to benchmarks/load_harness.py;
+        # carry it through unchanged when this bench rewrites the record
+        record["curve"] = baseline["curve"]
     with open(BENCH_JSON, "w") as fh:
         json.dump(record, fh, indent=2)
     print(f"\nwritten {BENCH_JSON.name}: "

@@ -15,7 +15,10 @@ vectors are classified through the selected datapath backend
 (--backend fused-packed | packed-xla | float-oracle); every non-oracle
 backend is checked bit-exactly against the ``apply_hard`` oracle before
 timing starts.  --ragged draws mixed request sizes in [1, batch] so the
-scheduler's coalescing/padding is exercised.
+scheduler's coalescing/padding is exercised.  --continuous serves the
+same stream through the continuous-batching async engine (scheduler
+thread, out-of-order futures, optional --deadline-ms SLO) instead of the
+sync submit/drain facade.
 
 Usage:
     python -m repro.launch.serve --arch mamba2-1.3b --reduced \
@@ -66,21 +69,38 @@ def dwn_serve(target, args) -> int:
     engine.warmup(batch)
 
     rng = np.random.default_rng(args.seed)
+    payloads = []
     for _ in range(requests):
         size = int(rng.integers(1, batch + 1)) if args.ragged else batch
-        engine.submit(engine.make_request(size, seed=int(rng.integers(2**31))))
-    done = engine.drain()
+        payloads.append(engine.make_request(
+            size, seed=int(rng.integers(2**31))))
+    if args.continuous:
+        # continuous-batching path: futures resolve out of order while
+        # the scheduler thread keeps steps in flight; a deadline makes
+        # admission control + shedding part of the run
+        with engine.serve():
+            pending = [engine.submit_async(
+                p, deadline_ms=args.deadline_ms or None) for p in payloads]
+            results = [r.future.result() for r in pending]
+        done = [r for r in results if r.ok]
+    else:
+        for p in payloads:
+            engine.submit(p)
+        done = engine.drain()
 
     rep = engine.report()
     rep["batch"] = batch
     rep["ragged"] = bool(args.ragged)
+    rep["continuous"] = bool(args.continuous)
     # headline keys keep their pre-refactor meaning: *datapath* (compute)
     # latency per microbatch step.  Queue wait — which grows with the
     # pre-submitted stream length — stays separate under "latency".
     lat = rep.get("latency", {}).get("compute_ms", {})
     rep["latency_ms_p50"] = lat.get("p50")
     rep["latency_ms_p99"] = lat.get("p99")
-    rep["sample"] = np.asarray(done[0].result[1][:8]).tolist()
+    if done:
+        first = done[0].value if args.continuous else done[0].result
+        rep["sample"] = np.asarray(first[1][:8]).tolist()
     print(json.dumps(rep))
     return 0
 
@@ -124,6 +144,15 @@ def main(argv=None):
     ap.add_argument("--ragged", action="store_true",
                     help="DWN mode: draw request sizes uniformly in "
                          "[1, batch] instead of a fixed batch")
+    ap.add_argument("--continuous", action="store_true",
+                    help="DWN mode: serve through the continuous-batching "
+                         "async engine (scheduler thread + per-request "
+                         "futures) instead of the sync submit/drain "
+                         "facade")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="DWN mode with --continuous: per-request SLO "
+                         "deadline; requests that provably cannot meet it "
+                         "are shed at admission (0 = no deadline)")
     ap.add_argument("--backend", default="",
                     choices=["", "auto"] + available_backends(),
                     help="DWN datapath backend (default: the arch's "

@@ -4,25 +4,36 @@ prefill/decode serving behind one submit/drain API.
 
 Layering (each importable on its own):
 
-    backends.py   datapath registry + per-(arch, bucket) compile cache
-                  + startup bit-exactness cross-check vs the oracle
-    scheduler.py  admission-order request queue, power-of-two batch
-                  buckets, per-request queue/compute latency accounting
-    engine.py     ServingEngine: submit/drain over either family, DWN
-                  batches sharded data-parallel across the host mesh
+    backends.py    datapath registry + per-(arch, bucket) compile cache
+                   + startup bit-exactness cross-check vs the oracle
+                   + per-bucket step-time estimates (StepTimeEstimator)
+    scheduler.py   admission-order request queue, power-of-two batch
+                   buckets, per-request queue/compute latency accounting
+                   (the synchronous submit/drain facade)
+    continuous.py  continuous-batching loop: scheduler thread, futures,
+                   SLO-aware admission + deadline shedding, bounded-queue
+                   backpressure
+    engine.py      ServingEngine: sync submit/drain AND async
+                   serve()/submit_async over either family, DWN batches
+                   sharded data-parallel across the host mesh
 
-``repro.launch.serve`` is a thin CLI over :class:`ServingEngine`.
+``repro.launch.serve`` is a thin CLI over :class:`ServingEngine`;
+``repro.launch.loadgen`` is the open-loop load generator that drives it
+to saturation.
 """
 
-from .backends import (Backend, BoundBackend, available_backends,
-                       get_backend, register_backend, build_dwn_model,
-                       verify_backends)
+from .backends import (Backend, BoundBackend, StepTimeEstimator,
+                       available_backends, get_backend, register_backend,
+                       build_dwn_model, verify_backends)
+from .continuous import (AsyncRequest, ContinuousScheduler, QueueFull,
+                         SLOConfig, ServeResult)
 from .scheduler import MicrobatchScheduler, Request, power_of_two_buckets
 from .engine import ServingEngine
 
 __all__ = [
-    "Backend", "BoundBackend", "available_backends", "get_backend",
-    "register_backend", "build_dwn_model", "verify_backends",
-    "MicrobatchScheduler", "Request", "power_of_two_buckets",
-    "ServingEngine",
+    "AsyncRequest", "Backend", "BoundBackend", "ContinuousScheduler",
+    "MicrobatchScheduler", "QueueFull", "Request", "SLOConfig",
+    "ServeResult", "ServingEngine", "StepTimeEstimator",
+    "available_backends", "build_dwn_model", "get_backend",
+    "power_of_two_buckets", "register_backend", "verify_backends",
 ]

@@ -12,16 +12,33 @@ LM archs serve the existing prefill + token-by-token decode loop (KV /
 SSM / LRU caches) one request per step, through the same queue and the
 same per-request queue/compute latency accounting.
 
-Usage:
+Two serving modes share the datapath and its compile/autotune caches:
+
+* **sync facade** (``submit`` + ``drain``): closed-loop, admission-order
+  microbatching — unchanged semantics, bit-exact with the async path;
+* **continuous batching** (``serve()`` / ``submit_async``): a dedicated
+  scheduler thread keeps steps in flight while requests stream in,
+  results complete out of order via per-request futures, deadlines are
+  enforced by SLO-aware admission control, and a bounded queue exerts
+  backpressure (``serving.continuous``).
+
+Usage (sync):
     engine = ServingEngine("dwn-jsc-sm", max_bucket=256)
     for xb in request_stream:
         engine.submit(xb)
     results = engine.drain()
     print(engine.report())
+
+Usage (continuous):
+    with engine.serve(slo=SLOConfig(max_queue_samples=2048)):
+        futs = [engine.submit_async(xb, deadline_ms=50).future
+                for xb in request_stream]
+        results = [f.result() for f in futs]   # ServeResult: ok or shed
 """
 
 from __future__ import annotations
 
+import contextlib
 import os
 import time
 from typing import Any, Sequence
@@ -34,10 +51,14 @@ from jax.experimental.shard_map import shard_map
 from ..configs import get_arch
 from ..configs.base import ArchConfig
 from ..models import api
+from ..runtime.straggler import StragglerMonitor
 from ..sharding.partition import Partitioner
 from ..launch.mesh import make_data_mesh, make_host_mesh
 from .backends import (AutoSelector, BoundBackend, DWNModelBundle,
-                       available_backends, get_backend, verify_backends)
+                       StepTimeEstimator, available_backends,
+                       estimator_from_calibration, get_backend,
+                       time_backend_step, verify_backends)
+from .continuous import AsyncRequest, ContinuousScheduler, SLOConfig
 from .scheduler import MicrobatchScheduler, Request, latency_stats
 
 
@@ -110,6 +131,15 @@ class ServingEngine:
         self._autotune_arg = autotune
         self._drain_wall = 0.0
         self._lm_stats: list[tuple[float, float]] = []
+        #: anomalous step times surface as counters in report(); fed by
+        #: both the sync drain loop and the continuous-batching loop
+        self.straggler = StragglerMonitor()
+        self._cont: ContinuousScheduler | None = None
+        self.estimator: StepTimeEstimator | None = None
+        #: slim async requests from finished serve() sessions + the last
+        #: session's loop counters (report() merges the live session in)
+        self._async_done: list[AsyncRequest] = []
+        self._async_counters: dict = {}
         if self.family == "dwn":
             self._init_dwn(cfg, backend, n_train, data_parallel, verify)
         else:
@@ -354,7 +384,7 @@ class ServingEngine:
         """Serve every queued request; blocks until all results ready."""
         t0 = time.perf_counter()
         if self.family == "dwn":
-            done = self.scheduler.drain_batched(self._dwn_step)
+            done = self.scheduler.drain_batched(self._monitored_step)
         else:
             done = self.scheduler.drain_serial(self._lm_step)
             self._lm_stats.extend((r.result["prefill_s"],
@@ -362,6 +392,90 @@ class ServingEngine:
                                   for r in done)
         self._drain_wall += time.perf_counter() - t0
         return done
+
+    def _monitored_step(self, x: np.ndarray):
+        """The DWN step with its wall time fed to the straggler monitor
+        (the sync drain loop's half of the satellite wiring; the
+        continuous loop reports through the same monitor)."""
+        t0 = time.perf_counter()
+        out = self._dwn_step(x)
+        self.straggler.report(time.perf_counter() - t0)
+        return out
+
+    # ------------------------------------------------------------------
+    # continuous-batching async API (DWN only)
+    # ------------------------------------------------------------------
+
+    def start_serving(self, *, slo: SLOConfig | None = None) -> None:
+        """Start the continuous-batching loop (a dedicated thread).
+
+        Requests then stream in through :meth:`submit_async` and complete
+        out of order via their futures; batch formation happens at step
+        boundaries over the same bucket ladder (compile + autotune caches
+        shared with the sync facade).  Admission control's step-time
+        estimates seed from the ``AutoSelector`` calibration when
+        ``backend="auto"``, else from one probe of the active backend at
+        ``max_bucket``; every step refines them online.
+        """
+        assert self.family == "dwn", "continuous batching is the DWN path"
+        assert self._cont is None, "serving loop already running"
+        if self.estimator is None:
+            if self.auto is not None:
+                self.estimator = estimator_from_calibration(self.auto)
+            else:
+                self.estimator = StepTimeEstimator()
+                probe = jnp.asarray(
+                    self.data.x_test[:self.scheduler.max_bucket])
+                self.estimator.seed(
+                    self.scheduler.max_bucket,
+                    time_backend_step(self.backend, probe, iters=2))
+        self._cont = ContinuousScheduler(
+            self._dwn_step, max_bucket=self.scheduler.max_bucket,
+            min_bucket=self.scheduler.min_bucket, slo=slo,
+            estimator=self.estimator, monitor=self.straggler)
+        self._cont.start()
+
+    def stop_serving(self, *, drain: bool = True) -> None:
+        """Stop the loop; ``drain=True`` serves the queue first.  Loop
+        counters survive in :meth:`report` (sessions accumulate)."""
+        assert self._cont is not None, "serving loop not running"
+        self._cont.stop(drain=drain)
+        self._async_done.extend(self._cont.completed)
+        self._async_counters = self._cont.counters()
+        self._cont = None
+
+    @contextlib.contextmanager
+    def serve(self, *, slo: SLOConfig | None = None):
+        """Context manager over one continuous-batching session::
+
+            with engine.serve(slo=SLOConfig(deadline_default_ms=50)):
+                req = engine.submit_async(xb, deadline_ms=20)
+                res = req.future.result()      # ServeResult
+        """
+        self.start_serving(slo=slo)
+        try:
+            yield self
+        finally:
+            self.stop_serving()
+
+    def submit_async(self, payload: Any, *,
+                     deadline_ms: float | None = None, priority: int = 0,
+                     timeout: float | None = None) -> AsyncRequest:
+        """Admit one request into the continuous-batching loop.
+
+        Requires :meth:`start_serving` / :meth:`serve`.  Returns the
+        :class:`AsyncRequest`; its ``future`` resolves to a
+        ``ServeResult`` — ``ok`` with ``value == (counts, pred)``, or
+        typed shed when the deadline was unmeetable (admission), expired
+        in queue, or missed at completion.  Raises ``QueueFull`` after
+        ``timeout`` when backpressure applies.
+        """
+        assert self._cont is not None, \
+            "submit_async needs the serving loop: use engine.serve()"
+        payload = np.asarray(payload)
+        return self._cont.submit(payload, payload.shape[0],
+                                 deadline_ms=deadline_ms,
+                                 priority=priority, timeout=timeout)
 
     # ------------------------------------------------------------------
     # reporting
@@ -375,25 +489,64 @@ class ServingEngine:
                 for name, b in self.backends.items() if b.compiles}
 
     def report(self) -> dict:
-        """JSON-able serving report over everything drained so far.
+        """JSON-able serving report over everything served so far.
 
         Units: ``throughput_samples_per_s`` is samples (DWN) or sequences
-        (LM) per wall-clock second across all drains;
+        (LM) per wall-clock second (sync drains + async session wall);
         ``latency.{queue,compute,total}_ms`` are per-request millisecond
-        percentiles; LM ``prefill_s`` / ``decode_s_per_tok`` are seconds.
+        percentiles (p50/p99/p999) over *served* requests — shed requests
+        are excluded from latency and counted in ``shed``;
+        ``queue_depth`` / ``shed`` / ``straggler`` cover both serving
+        modes; LM ``prefill_s`` / ``decode_s_per_tok`` are seconds.
         """
-        reqs: Sequence[Request] = self.scheduler.completed
+        async_all = list(self._async_done)
+        async_counters = dict(self._async_counters)
+        if self._cont is not None:
+            async_all += list(self._cont.completed)
+            async_counters = self._cont.counters()
+        async_ok = [r for r in async_all if r.shed is None]
+        shed = [r for r in async_all if r.shed is not None]
+        reqs: Sequence[Request] = (list(self.scheduler.completed)
+                                   + async_ok)
         served = sum(r.size for r in reqs)
+        wall = self._drain_wall + async_counters.get("session_wall_s", 0.0)
+        shed_by: dict[str, int] = {}
+        for r in shed:
+            shed_by[r.shed] = shed_by.get(r.shed, 0) + 1
+        finished = len(reqs) + len(shed)
         out = {
             "arch": self.cfg.name,
             "family": self.cfg.family,
             "requests": len(reqs),
             "served": served,
             "throughput_samples_per_s":
-                round(served / self._drain_wall, 1) if self._drain_wall
-                else 0.0,
+                round(served / wall, 1) if wall else 0.0,
             "latency": latency_stats(list(reqs)),
+            "queue_depth": {
+                "pending": self.scheduler.pending
+                + (self._cont.pending if self._cont is not None else 0),
+                "max_requests": max(
+                    self.scheduler.max_pending,
+                    async_counters.get("queue_depth_max_requests", 0)),
+            },
+            "shed": {
+                "requests": len(shed),
+                "rate": round(len(shed) / finished, 4) if finished
+                else 0.0,
+                "by_reason": shed_by,
+            },
+            "straggler": {
+                "window": len(self.straggler.times),
+                "events": len(self.straggler.events),
+                "last_z": round(self.straggler.events[-1].z, 2)
+                if self.straggler.events else None,
+            },
         }
+        if async_counters:
+            out["async"] = async_counters
+            if self.estimator is not None:
+                out["async"]["step_estimates_ms"] = \
+                    self.estimator.snapshot()
         if self.family == "dwn":
             out.update({
                 "mode": "dwn-classify",

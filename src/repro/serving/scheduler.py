@@ -56,6 +56,15 @@ def power_of_two_buckets(min_bucket: int, max_bucket: int) -> tuple[int, ...]:
     return tuple(out)
 
 
+def bucket_for(n: int, buckets: tuple[int, ...]) -> int:
+    """Smallest ladder bucket holding n samples (n <= buckets[-1])."""
+    assert 0 < n <= buckets[-1], (n, buckets)
+    for b in buckets:
+        if n <= b:
+            return b
+    raise AssertionError  # unreachable: ladder ends at max_bucket
+
+
 @dataclasses.dataclass
 class Request:
     """One serving request plus its latency accounting."""
@@ -83,14 +92,23 @@ class Request:
 
 
 class MicrobatchScheduler:
-    """Admission-order FIFO with power-of-two batch bucketing."""
+    """Admission-order FIFO with power-of-two batch bucketing.
 
-    def __init__(self, *, max_bucket: int = 256, min_bucket: int = 8):
+    ``timer`` is injectable (default ``time.perf_counter``) so latency
+    attribution — queue time from *original submit* even across oversize
+    chunk splits — is testable with a deterministic clock.
+    """
+
+    def __init__(self, *, max_bucket: int = 256, min_bucket: int = 8,
+                 timer: Callable[[], float] = time.perf_counter):
         self.buckets = power_of_two_buckets(min_bucket, max_bucket)
         self.min_bucket = min_bucket
         self.max_bucket = max_bucket
+        self._timer = timer
         self._queue: deque[Request] = deque()
         self._next_rid = 0
+        #: high-water mark of queued requests (serving report observable)
+        self.max_pending = 0
         #: accounting history: slim copies (payload/result dropped) so a
         #: long-lived server's latency stats don't pin every array served.
         #: Full requests — payloads and results included — are returned to
@@ -107,9 +125,10 @@ class MicrobatchScheduler:
         if size is None:
             size = int(np.asarray(payload).shape[0])
         req = Request(rid=self._next_rid, payload=payload, size=size,
-                      t_submit=time.perf_counter())
+                      t_submit=self._timer())
         self._next_rid += 1
         self._queue.append(req)
+        self.max_pending = max(self.max_pending, len(self._queue))
         return req
 
     @property
@@ -118,11 +137,7 @@ class MicrobatchScheduler:
 
     def bucket_for(self, n: int) -> int:
         """Smallest ladder bucket holding n samples (n <= max_bucket)."""
-        assert 0 < n <= self.max_bucket, (n, self.max_bucket)
-        for b in self.buckets:
-            if n <= b:
-                return b
-        raise AssertionError  # unreachable: ladder ends at max_bucket
+        return bucket_for(n, self.buckets)
 
     # -- draining -----------------------------------------------------------
 
@@ -159,10 +174,16 @@ class MicrobatchScheduler:
         while self._queue:
             head = self._queue[0]
             if head.size > self.max_bucket:
-                # oversize: serve alone, split into max_bucket chunks
+                # oversize: serve alone, split into max_bucket chunks.
+                # The clock does NOT restart per chunk: t_start is
+                # stamped once at first step launch (before the payload
+                # conversion, which is compute-side work — the group path
+                # converts inside _run_chunk, after its t_start), so
+                # queue_ms spans original submit -> first launch and
+                # compute_ms spans every chunk.
                 req = self._queue.popleft()
+                req.t_start = self._timer()
                 x = np.asarray(req.payload)
-                req.t_start = time.perf_counter()
                 chunks, buckets = [], []
                 for i in range(0, req.size, self.max_bucket):
                     bucket, outs = self._run_chunk(
@@ -172,18 +193,18 @@ class MicrobatchScheduler:
                     chunks.append(outs)
                 req.result = tuple(np.concatenate(parts, axis=0)
                                    for parts in zip(*chunks))
-                req.t_done = time.perf_counter()
+                req.t_done = self._timer()
                 req.buckets = tuple(buckets)
                 done.append(req)
                 continue
             group = self._take_microbatch()
             total = sum(r.size for r in group)
-            t_start = time.perf_counter()
+            t_start = self._timer()
             for r in group:
                 r.t_start = t_start
             bucket, outs = self._run_chunk(
                 step, [np.asarray(r.payload) for r in group], total)
-            t_done = time.perf_counter()
+            t_done = self._timer()
             off = 0
             for r in group:
                 r.result = tuple(o[off:off + r.size] for o in outs)
@@ -203,27 +224,32 @@ class MicrobatchScheduler:
         done: list[Request] = []
         while self._queue:
             req = self._queue.popleft()
-            req.t_start = time.perf_counter()
+            req.t_start = self._timer()
             req.result = step(req.payload)
-            req.t_done = time.perf_counter()
+            req.t_done = self._timer()
             req.buckets = (req.size,)
             done.append(req)
         self._record(done)
         return done
 
 
+def percentiles(values, *, round_to: int = 3) -> dict:
+    """{p50, p99, p999, mean} over a value sequence (shared schema between
+    the per-backend rows and the load-harness curve levels)."""
+    vals = np.asarray(list(values), np.float64)
+    return {"p50": round(float(np.percentile(vals, 50)), round_to),
+            "p99": round(float(np.percentile(vals, 99)), round_to),
+            "p999": round(float(np.percentile(vals, 99.9)), round_to),
+            "mean": round(float(vals.mean()), round_to)}
+
+
 def latency_stats(requests: list[Request]) -> dict:
     """Queue/compute/total latency percentiles over completed requests."""
     if not requests:
         return {}
-    out = {}
-    for kind in ("queue_ms", "compute_ms", "total_ms"):
-        vals = np.asarray([getattr(r, kind) for r in requests])
-        out[kind] = {"p50": round(float(np.percentile(vals, 50)), 3),
-                     "p99": round(float(np.percentile(vals, 99)), 3),
-                     "mean": round(float(vals.mean()), 3)}
-    return out
+    return {kind: percentiles(getattr(r, kind) for r in requests)
+            for kind in ("queue_ms", "compute_ms", "total_ms")}
 
 
-__all__ = ["MicrobatchScheduler", "Request", "latency_stats",
-           "next_pow2", "power_of_two_buckets"]
+__all__ = ["MicrobatchScheduler", "Request", "bucket_for", "latency_stats",
+           "next_pow2", "percentiles", "power_of_two_buckets"]

@@ -108,6 +108,58 @@ def test_scheduler_serial_latency_accounting():
     assert done[0].t_done >= done[0].t_start >= done[0].t_submit
 
 
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_split_timing_attributed_from_original_submit():
+    """Oversize requests split into max-bucket chunks keep their queue
+    time anchored at the original submit: the clock never restarts per
+    chunk, and payload conversion is charged to compute, exactly like
+    the coalesced-group path."""
+    clock = _FakeClock()
+    sched = MicrobatchScheduler(max_bucket=32, min_bucket=8, timer=clock)
+
+    def step(x):
+        clock.t += 1.0                     # each chunk costs exactly 1s
+        return (x[:, 0].copy(),)
+
+    sched.submit(np.zeros((100, 2), np.float32))   # 4 chunks: 32*3 + 4
+    clock.t = 5.0                                  # queued for 5s
+    done = sched.drain_batched(step)
+    (req,) = done
+    assert req.queue_ms == pytest.approx(5_000.0)
+    assert req.compute_ms == pytest.approx(4_000.0)
+    assert req.buckets == (32, 32, 32, 8)
+    # group path under the same fake clock: identical attribution rules
+    sched.submit(np.zeros((4, 2), np.float32))
+    sched.submit(np.zeros((8, 2), np.float32))
+    clock.t = 12.0
+    a, b = sorted(sched.drain_batched(step), key=lambda r: r.rid)
+    assert a.queue_ms == pytest.approx(3_000.0)    # 12 - 9 (submit time)
+    assert b.queue_ms == pytest.approx(3_000.0)
+    assert a.compute_ms == b.compute_ms == pytest.approx(1_000.0)
+
+
+def test_latency_stats_include_p999():
+    from repro.serving.scheduler import latency_stats, percentiles
+    sched = MicrobatchScheduler(max_bucket=8)
+    for i in range(4):
+        sched.submit(np.zeros((2, 2), np.float32))
+    sched.drain_batched(lambda x: (x[:, 0],))
+    stats = latency_stats(sched.completed)
+    for kind in ("queue_ms", "compute_ms", "total_ms"):
+        assert {"p50", "p99", "p999", "mean"} <= set(stats[kind])
+    p = percentiles(range(1, 1001))
+    assert p["p50"] == pytest.approx(500.5)
+    assert p["p999"] == pytest.approx(1000, abs=1.1)
+    assert latency_stats([]) == {}
+
+
 # ---------------------------------------------------------------------------
 # backends: bit-exact parity vs the oracle on all three serving presets
 # ---------------------------------------------------------------------------
