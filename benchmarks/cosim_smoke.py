@@ -1,0 +1,50 @@
+"""Cosim smoke — RTL-vs-oracle verification timing on the sm preset.
+
+Emits the accelerator for ``dwn-jsc-sm`` (TEN and PEN), runs the
+pure-Python netlist evaluator over real JSC vectors, and asserts
+bit-exact agreement with ``apply_hard_packed`` (argmax, winning count,
+per-class counts).  The full sm/md/lg x TEN/PEN gate runs as its own CI
+step via ``python -m repro.hw.cosim``; this row keeps a wall-clock
+number for the verification itself in the benchmark record.
+"""
+
+from .common import csv_row, Timer
+
+
+def run():
+    import dataclasses
+
+    from repro.data.jsc import load_jsc
+    from repro.dwn import DWNArtifact
+    from repro.dwn.spec import get_spec
+    from repro.hw.cosim import simulator_available
+
+    data = load_jsc(1000, 256, seed=0)
+    base = get_spec("dwn-jsc-sm")
+    art_ten = DWNArtifact(base).fit(data.x_train, seed=0)
+    state = (art_ten.params, art_ten.buffers)
+    sim = simulator_available() or "none (python evaluator only)"
+    print(f"simulator: {sim}")
+
+    reports = []
+    for variant in ("TEN", "PEN"):
+        spec = base if variant == "TEN" else dataclasses.replace(
+            base, variant="PEN", input_bits=9)
+        art = DWNArtifact(spec).adopt(*state, note="bench").freeze()
+        with Timer() as t:
+            rep = art.verify_rtl(data.x_test[:256], backend="python")
+        assert rep.counts_checked and rep.n_vectors == 256
+        csv_row(f"cosim/{spec.label}", t.us,
+                f"vectors={rep.n_vectors};backends={'+'.join(rep.backends)}")
+        reports.append(rep)
+
+    print("| spec | vectors | backends | bit-exact |")
+    print("|---|---|---|---|")
+    for rep in reports:
+        print(f"| {rep.spec} | {rep.n_vectors} | "
+              f"{'+'.join(rep.backends)} | yes |")
+    return reports
+
+
+if __name__ == "__main__":
+    run()

@@ -16,7 +16,7 @@ def main(argv=None):
     ap.add_argument("--only", default="")
     args = ap.parse_args(argv)
     from . import (table1_hardware, table2_literature, table3_quantization,
-                   fig2_encoding, fig5_breakdown, fig6_pareto,
+                   cosim_smoke, fig2_encoding, fig5_breakdown, fig6_pareto,
                    roofline_report, kernels_bench, load_harness, serve_bench,
                    sweep_smoke, train_bench)
     benches = {
@@ -31,6 +31,7 @@ def main(argv=None):
         "serve": serve_bench.run,
         "load": load_harness.run,
         "sweep": sweep_smoke.run,
+        "cosim": cosim_smoke.run,
         "train": train_bench.run,
     }
     only = [s for s in args.only.split(",") if s]

@@ -6,6 +6,7 @@ An artifact owns every stage of a DWN build and enforces their order::
                                                       │                  │
                                                 hw_report()       serving_model()
                                                 verilog()         (DWNModelBundle)
+                                                verify_rtl()
 
 * **trained** — ``params`` (LUT scores/tables) + ``buffers`` (thermometer
   thresholds fit on training features).  ``fit`` initializes without
@@ -240,6 +241,23 @@ class DWNArtifact:
         self._require("frozen", "verilog", "freeze()")
         from ..hw.verilog import emit_dwn
         return emit_dwn(self.frozen, name=name, pipeline=pipeline)
+
+    def verify_rtl(self, x=None, *, n: int = 256, backend: str = "auto",
+                   pipeline: bool = True, name: str = "dwn_top"):
+        """Co-simulate the emitted RTL against ``apply_hard_packed``.
+
+        Proves bit-exact agreement (argmax, winning count, and — on the
+        pure-Python evaluator path — per-class counts) on real JSC
+        vectors; raises ``hw.cosim.RTLMismatch`` on any disagreement.
+        Returns the ``hw.cosim.CosimReport`` and records the outcome in
+        ``calibration["rtl_verified"]``.
+        """
+        self._require("frozen", "verify_rtl", "freeze()")
+        from ..hw.cosim import verify_rtl as _verify
+        report = _verify(self, x, n=n, backend=backend,
+                         pipeline=pipeline, name=name)
+        self.calibration["rtl_verified"] = report.to_dict()
+        return report
 
     # -- persistence ---------------------------------------------------
 

@@ -10,6 +10,13 @@ Usage:
     python -m repro.launch.sweep --grid paper --out sweep.json --plots
     python -m repro.launch.sweep --grid encoding --epochs 2 --no-serve
     python -m repro.launch.sweep --grid my_points.json --fresh
+    python -m repro.launch.sweep --grid encoding --autodesign --acc-floor 0.70
+
+``--autodesign`` walks the accuracy-vs-LUTs Pareto front (min LUTs at an
+accuracy floor, or max accuracy under ``--lut-budget``), rebuilds the
+winner, co-simulates its emitted Verilog against the packed oracle
+(``repro.hw.cosim``), and writes the verified RTL — non-zero exit on any
+mismatch or unmet objective.
 """
 
 from __future__ import annotations
@@ -107,6 +114,22 @@ def main(argv=None):
     ap.add_argument("--fresh", action="store_true",
                     help="recompute every point (cache is still refreshed)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autodesign", action="store_true",
+                    help="pick a design from the accuracy-vs-LUTs Pareto "
+                         "front and emit its co-simulation-verified "
+                         "Verilog (needs --acc-floor or --lut-budget)")
+    ap.add_argument("--acc-floor", type=float, default=None,
+                    help="autodesign objective: minimum LUTs subject to "
+                         "accuracy >= FLOOR")
+    ap.add_argument("--lut-budget", type=int, default=None,
+                    help="autodesign objective: maximum accuracy subject "
+                         "to total LUTs <= BUDGET")
+    ap.add_argument("--autodesign-out", default="results/autodesign",
+                    help="directory for the verified RTL + summary JSON")
+    ap.add_argument("--cosim-n", type=int, default=256,
+                    help="JSC vectors for the RTL verification")
+    ap.add_argument("--cosim-backend", default="auto",
+                    choices=["auto", "python", "iverilog"])
     args = ap.parse_args(argv)
 
     settings = SweepSettings(
@@ -168,6 +191,25 @@ def main(argv=None):
         cached = sum(r.cached for r in result.points)
         print(f"\nwritten {args.out}: {len(result.points)} points "
               f"({cached} from cache)")
+
+    if args.autodesign:
+        from ..hw.cosim import RTLMismatch
+        from ..sweep.autodesign import (AutodesignError, choose_design,
+                                        emit_verified)
+        print("\nAutodesign:")
+        try:
+            choice = choose_design(result, acc_floor=args.acc_floor,
+                                   lut_budget=args.lut_budget)
+            emit_verified(choice, settings, out_dir=args.autodesign_out,
+                          n_vectors=args.cosim_n,
+                          backend=args.cosim_backend,
+                          log=lambda m: print(f"  {m}", flush=True))
+        except AutodesignError as e:
+            print(f"  autodesign FAILED: {e}")
+            return 1
+        except RTLMismatch as e:
+            print(f"  autodesign RTL VERIFICATION FAILED:\n{e}")
+            return 1
 
     if failures:
         print(f"\npaper-tolerance FAILURES: {failures}")

@@ -39,6 +39,34 @@ def test_pack_unpack_roundtrip(num_bits, batch, seed):
         np.asarray(unpack_bits(jwords, num_bits)), bits)
 
 
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 9), st.integers(0, 2 ** 31 - 1))
+def test_unpack_pack_identity_at_word_boundaries(words_n, seed):
+    """The other direction: pack(unpack(words)) is the identity on any
+    word content when num_bits fills the words exactly."""
+    rng = np.random.default_rng(seed)
+    words = rng.integers(0, 2 ** 32, (3, words_n), dtype=np.uint32)
+    num_bits = 32 * words_n
+    np.testing.assert_array_equal(
+        pack_bits_np(unpack_bits_np(words, num_bits)), words)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
+def test_unpack_pack_identity_modulo_pad(num_bits, seed):
+    """At ragged widths the identity holds after zeroing the pad bits —
+    and only the pad bits are dropped."""
+    rng = np.random.default_rng(seed)
+    words = rng.integers(0, 2 ** 32, (3, words_for_bits(num_bits)),
+                         dtype=np.uint32)
+    masked = words.copy()
+    tail = num_bits & 31
+    if tail:
+        masked[:, -1] &= np.uint32((1 << tail) - 1)
+    np.testing.assert_array_equal(
+        pack_bits_np(unpack_bits_np(words, num_bits)), masked)
+
+
 @settings(max_examples=40, deadline=None)
 @given(st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
 def test_pad_bits_are_zero_and_popcount_matches(num_bits, seed):

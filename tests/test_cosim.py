@@ -1,0 +1,282 @@
+"""Co-simulation harness tests: evaluator primitives (property-based),
+netlist parsing, end-to-end RTL-vs-oracle equivalence, mutation
+detection, the testbench emitter, and the artifact lifecycle hook."""
+
+import re
+import shutil
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.model import DWNConfig, apply_hard_packed, freeze, init_dwn
+from repro.core.thermometer import encode_np
+from repro.data.jsc import load_jsc
+from repro.hw.cosim import (CosimParseError, RTLMismatch, as_signed,
+                            emit_testbench, eval_argmax, eval_comparator,
+                            eval_lut, eval_popcount, evaluate_netlist,
+                            fixed_point_int, parse_netlist,
+                            simulator_available, verify_rtl)
+from repro.hw.verilog import _fixed_point_const, emit_dwn
+
+
+# ---------------------------------------------------------------------------
+# primitives vs direct numpy models (property-based)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**64 - 1), st.integers(1, 6), st.integers(0, 9999))
+def test_eval_lut_matches_table(init, n, seed):
+    init &= (1 << (1 << n)) - 1
+    rng = np.random.default_rng(seed)
+    sel = rng.integers(0, 2, size=(17, n))
+    got = eval_lut(init, sel)
+    for row, g in zip(sel, got):
+        addr = sum(int(b) << i for i, b in enumerate(row))
+        assert g == (init >> addr) & 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 9999))
+def test_eval_comparator_is_signed_compare(width, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (width - 1)), (1 << (width - 1)) - 1
+    x = rng.integers(lo, hi + 1, size=31)
+    thr = int(rng.integers(lo, hi + 1))
+    const = thr & ((1 << width) - 1)          # two's-complement literal
+    np.testing.assert_array_equal(eval_comparator(x, const, width),
+                                  (x > thr).astype(np.uint8))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 600), st.integers(0, 9999))
+def test_eval_popcount_is_sum(width, seed):
+    bits = np.random.default_rng(seed).integers(0, 2, size=(9, width))
+    np.testing.assert_array_equal(eval_popcount(bits), bits.sum(-1))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 9999))
+def test_eval_argmax_ties_to_lower(classes, seed):
+    c = np.random.default_rng(seed).integers(0, 4, size=(41, classes))
+    best, idx = eval_argmax(c)
+    for row, b, i in zip(c, best, idx):
+        assert b == row.max()
+        assert i == min(np.flatnonzero(row == row.max()))
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(1, 16), st.integers(-(1 << 16), (1 << 16) - 1))
+def test_as_signed_roundtrips_fixed_point_const(frac, k):
+    k = max(-(1 << frac), min((1 << frac) - 1, k))    # clamp to grid
+    c = _fixed_point_const(k / (1 << frac), frac)
+    assert 0 <= c < (1 << (frac + 1))
+    assert int(as_signed(c, frac + 1)) == k
+
+
+def test_fixed_point_int_matches_oracle_quantization():
+    from repro.core.thermometer import quantize_fixed_point
+    x = np.linspace(-1.3, 1.3, 97, dtype=np.float32)
+    for frac in (3, 5, 8):
+        q = np.asarray(quantize_fixed_point(x, frac), np.float64)
+        np.testing.assert_array_equal(
+            fixed_point_int(x, frac), np.round(q * (1 << frac)))
+
+
+# ---------------------------------------------------------------------------
+# parser
+# ---------------------------------------------------------------------------
+
+def _random_frozen(pen, *, layers=(12, 10), seed=1):
+    data = load_jsc(512, 128, seed=0)
+    cfg = DWNConfig(num_features=16, bits_per_feature=8,
+                    lut_counts=layers, num_classes=5)
+    params, buffers = init_dwn(jax.random.PRNGKey(seed), cfg, data.x_train)
+    fz = freeze(params, buffers, cfg, input_frac_bits=5 if pen else None)
+    return fz, data
+
+
+def test_parse_netlist_structure():
+    fz, _ = _random_frozen(pen=True)
+    net = parse_netlist(emit_dwn(fz, name="dwn_p"))
+    assert net.name == "dwn_p" and net.pen
+    assert net.num_features == 16 and net.input_width == 6
+    assert len(net.argmax_srcs) == 5
+    assert net.meta["variant"] == "PEN"
+    assert net.meta["pipeline"] == "1"
+    tags = {op[0] for op in net.ops}
+    assert {"cmp", "lut", "const", "sum", "vec", "out"} <= tags
+
+    net_ten = parse_netlist(emit_dwn(fz, name="dwn_c", pipeline=False))
+    assert "vec" not in {op[0] for op in net_ten.ops if op[1].endswith("_q")}
+
+
+def test_parse_netlist_rejects_unknown_constructs():
+    fz, _ = _random_frozen(pen=False)
+    src = emit_dwn(fz)
+    for bad in ["  assign foo = bar & baz;",
+                "  always @(negedge clk) q <= d;",
+                "  wire [3:0] w = a - b;"]:
+        with pytest.raises(CosimParseError):
+            parse_netlist(src.replace("endmodule", bad + "\nendmodule"))
+    with pytest.raises(CosimParseError):
+        parse_netlist("// nothing here\n")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: evaluator vs apply_hard_packed
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pen", [False, True], ids=["TEN", "PEN"])
+@pytest.mark.parametrize("pipeline", [True, False], ids=["pipe", "comb"])
+def test_evaluator_bit_exact_multilayer(pen, pipeline):
+    fz, data = _random_frozen(pen)
+    x = data.x_test[:64]
+    rep = verify_rtl(fz, x, pipeline=pipeline, backend="python")
+    assert rep.counts_checked and rep.backends == ["python"]
+    assert rep.variant == ("PEN" if pen else "TEN")
+
+
+def test_evaluator_matches_oracle_counts_directly():
+    import jax.numpy as jnp
+    fz, data = _random_frozen(pen=True)
+    x = data.x_test[:32]
+    res = evaluate_netlist(emit_dwn(fz), x=x)
+    counts = np.asarray(apply_hard_packed(fz, jnp.asarray(x)))
+    np.testing.assert_array_equal(res.class_counts, counts)
+    np.testing.assert_array_equal(res.argmax_idx, counts.argmax(-1))
+
+
+def test_ten_path_takes_precomputed_bits():
+    fz, data = _random_frozen(pen=False)
+    x = data.x_test[:16]
+    bits = encode_np(x, fz.thresholds)
+    res = evaluate_netlist(emit_dwn(fz), ten_bits=bits)
+    ref = verify_rtl(fz, x, backend="python")
+    assert ref.n_vectors == 16
+    np.testing.assert_array_equal(res.argmax_idx,
+                                  evaluate_netlist(ref.src,
+                                                   ten_bits=bits).argmax_idx)
+
+
+def test_mutated_truth_table_is_detected():
+    fz, data = _random_frozen(pen=True)
+    src = emit_dwn(fz)
+    m = re.search(r"INIT_0_0 = 64'h([0-9a-f]{16});", src)
+    flipped = f"{(~int(m.group(1), 16)) & (2**64 - 1):016x}"
+    bad = src.replace(f"INIT_0_0 = 64'h{m.group(1)};",
+                      f"INIT_0_0 = 64'h{flipped};")
+    with pytest.raises(RTLMismatch, match="disagrees"):
+        verify_rtl(fz, data.x_test[:64], backend="python", src=bad)
+
+
+def test_mutated_threshold_is_detected():
+    fz, data = _random_frozen(pen=True)
+    src = emit_dwn(fz)
+    m = re.search(r"\$signed\(6'h([0-9a-f]+)\)", src)
+    orig = int(m.group(1), 16)
+    bad = src.replace(f"$signed(6'h{m.group(1)})",
+                      f"$signed(6'h{(orig ^ 0x20):x})", 1)  # flip sign bit
+    with pytest.raises(RTLMismatch):
+        verify_rtl(fz, data.x_test[:64], backend="python", src=bad)
+
+
+def test_verify_rtl_on_jsc_presets_256_vectors():
+    """The acceptance property at tier-1 scale: sm-50 TEN + PEN, 256 real
+    JSC vectors, bit-exact counts/argmax (md/lg ride in the CI cosim
+    step, same entry point)."""
+    from repro.core import JSC_PRESETS
+    data = load_jsc(1000, 256, seed=0)
+    cfg = JSC_PRESETS["sm-50"]
+    params, buffers = init_dwn(jax.random.PRNGKey(0), cfg, data.x_train)
+    for frac in (None, 8):
+        fz = freeze(params, buffers, cfg, input_frac_bits=frac)
+        rep = verify_rtl(fz, data.x_test[:256], backend="python")
+        assert rep.n_vectors == 256 and rep.counts_checked
+
+
+# ---------------------------------------------------------------------------
+# testbench emission + simulator backend
+# ---------------------------------------------------------------------------
+
+def test_emit_testbench_structure():
+    fz, data = _random_frozen(pen=True)
+    x = data.x_test[:3]
+    tb = emit_testbench(fz, x, name="dwn_p")
+    assert "module tb_dwn;" in tb and tb.count("$display") == 3
+    assert "dwn_p dut" in tb and ".x(x)" in tb
+    assert tb.count("repeat") == 3 and "$finish" in tb
+
+    fz_t, _ = _random_frozen(pen=False)
+    tb_t = emit_testbench(fz_t, x, name="dwn_t")
+    assert ".ten_bits(ten_bits)" in tb_t
+    # LSB-first packing: recompute vector 0's literal from the oracle bits
+    bits = encode_np(x, fz_t.thresholds).astype(np.uint64)
+    word = 0
+    for k in range(bits.shape[1]):
+        if bits[0, k]:
+            word |= 1 << k
+    assert f"ten_bits = {bits.shape[1]}'h{word:x};" in tb_t
+
+
+def test_simulator_detection_is_consistent():
+    sim = simulator_available()
+    has = bool(shutil.which("iverilog")) and bool(shutil.which("vvp"))
+    assert (sim == "iverilog") == has
+
+
+@pytest.mark.skipif(simulator_available() is None,
+                    reason="iverilog/vvp not on PATH (pure-Python "
+                           "evaluator path still covers equivalence)")
+@pytest.mark.parametrize("pen", [False, True], ids=["TEN", "PEN"])
+def test_iverilog_backend_bit_exact(pen):
+    fz, data = _random_frozen(pen)
+    rep = verify_rtl(fz, data.x_test[:16], backend="iverilog")
+    assert rep.backends == ["iverilog"]
+
+
+def test_missing_simulator_raises_not_skips():
+    from repro.hw.cosim import SimulatorError
+    if simulator_available() is None:
+        fz, data = _random_frozen(pen=False)
+        with pytest.raises(SimulatorError, match="no Verilog simulator"):
+            verify_rtl(fz, data.x_test[:4], backend="iverilog")
+
+
+# ---------------------------------------------------------------------------
+# artifact lifecycle + CLI plumbing
+# ---------------------------------------------------------------------------
+
+def test_artifact_verify_rtl_lifecycle():
+    from repro.dwn import DWNArtifact, LifecycleError
+    from repro.dwn.spec import DWNSpec
+    data = load_jsc(512, 128, seed=0)
+    spec = DWNSpec(preset="sm-10", variant="PEN", input_bits=6)
+    art = DWNArtifact(spec)
+    with pytest.raises(LifecycleError, match="freeze"):
+        art.verify_rtl(data.x_test[:8])
+    art.fit(data.x_train).freeze()
+    rep = art.verify_rtl(data.x_test[:32], backend="python")
+    assert rep.spec == spec.label
+    assert art.calibration["rtl_verified"]["n_vectors"] == 32
+    assert art.calibration["rtl_verified"]["counts_checked"]
+
+
+def test_cosim_cli_smoke(tmp_path, capsys):
+    from repro.hw.cosim import main
+    out = tmp_path / "report.json"
+    rc = main(["--presets", "dwn-jsc-sm", "--variants", "TEN",
+               "--n", "32", "--n-train", "512", "--backend", "python",
+               "--out", str(out)])
+    assert rc == 0
+    import json
+    rep = json.loads(out.read_text())
+    assert rep["results"][0]["agree"] is True
+    assert "cosim OK" in capsys.readouterr().out
+
+
+def test_cosim_cli_require_simulator_exit():
+    from repro.hw.cosim import main
+    if simulator_available() is None:
+        assert main(["--require-simulator", "--n", "4"]) == 2

@@ -1,6 +1,9 @@
 """Hardware generator + cost model tests."""
 
+import dataclasses
 import math
+import os
+from pathlib import Path
 
 import numpy as np
 import jax
@@ -94,3 +97,158 @@ def test_compare_with_paper_has_reference():
                              input_bits=6)
     assert row.paper_luts == PAPER_TABLE3["sm-10"]["ft_luts"]
     assert row.lut_error_pct is not None
+
+
+# ---------------------------------------------------------------------------
+# _fixed_point_const: pinned two's-complement behavior
+# ---------------------------------------------------------------------------
+
+def test_fixed_point_const_explicit_cases():
+    """Negative thresholds and boundary rounding, pinned value by value
+    (cross-checked against the oracle's quantize_fixed_point grid — the
+    cosim equivalence tests prove the comparator semantics end to end)."""
+    from repro.hw.verilog import _fixed_point_const
+    # frac_bits=4 -> 5-bit two's complement, grid step 1/16
+    assert _fixed_point_const(0.0, 4) == 0x00
+    assert _fixed_point_const(0.5, 4) == 0x08
+    assert _fixed_point_const(-1.0, 4) == 0x10          # most negative
+    assert _fixed_point_const(-0.0625, 4) == 0x1f       # -1/16 -> all ones
+    assert _fixed_point_const(-0.5, 4) == 0x18
+    assert _fixed_point_const(0.9375, 4) == 0x0f        # largest positive
+    # saturation at both rails
+    assert _fixed_point_const(1.0, 4) == 0x0f
+    assert _fixed_point_const(2.5, 4) == 0x0f
+    assert _fixed_point_const(-1.5, 4) == 0x10
+    # off-grid values round like the oracle (banker's rounding at ties)
+    assert _fixed_point_const(0.03125, 4) == 0x00       # 0.5 ulp -> even 0
+    assert _fixed_point_const(0.09375, 4) == 0x02       # 1.5 ulp -> even 2
+    assert _fixed_point_const(-0.03125, 4) == 0x00
+    assert _fixed_point_const(0.07, 4) == 0x01
+    # width scales with frac_bits
+    assert _fixed_point_const(-1.0, 8) == 0x100
+    assert _fixed_point_const(-1.0, 1) == 0x2
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(1, 12), st.floats(-1.0, 0.999))
+def test_fixed_point_const_agrees_with_oracle_grid(frac, v):
+    """The emitted literal, reinterpreted as signed, equals the oracle's
+    quantized value scaled to the grid — for every on-or-off-grid input."""
+    from repro.core.thermometer import quantize_fixed_point
+    from repro.hw.cosim import as_signed
+    from repro.hw.verilog import _fixed_point_const
+    c = _fixed_point_const(v, frac)
+    q = float(np.asarray(quantize_fixed_point(np.float32(v), frac)))
+    assert int(as_signed(c, frac + 1)) == round(q * (1 << frac))
+
+
+# ---------------------------------------------------------------------------
+# well_formed on every registered preset x variant x placement
+# ---------------------------------------------------------------------------
+
+def _all_preset_sources():
+    """Emit RTL for every registered spec preset x {TEN, PEN} x placement,
+    memoizing the expensive fit per unique (tier, T, placement)."""
+    from repro.core.thermometer import PLACEMENTS
+    from repro.data.jsc import load_jsc
+    from repro.dwn import DWNArtifact
+    from repro.dwn.spec import get_spec, spec_presets
+
+    data = load_jsc(256, 16, seed=0)
+    trained: dict = {}
+    frozen: dict = {}
+
+    def art_for(spec):
+        tkey = (spec.preset, spec.bits, spec.placement)
+        if tkey not in trained:
+            ten = dataclasses.replace(spec, variant="TEN", input_bits=None)
+            a = DWNArtifact(ten).fit(data.x_train, seed=0)
+            trained[tkey] = (a.params, a.buffers)
+        fkey = tkey + (spec.variant,)
+        if fkey not in frozen:
+            art = DWNArtifact(spec)
+            art.adopt(*trained[tkey], note="test").freeze()
+            frozen[fkey] = art
+        return frozen[fkey]
+
+    for name in spec_presets():
+        base = get_spec(name)
+        for variant in ("TEN", "PEN"):
+            for placement in PLACEMENTS:
+                spec = dataclasses.replace(
+                    base, variant=variant, placement=placement,
+                    input_bits=None if variant == "TEN"
+                    else (base.input_bits or 8))
+                yield name, spec, art_for(spec).verilog(name="dwn_t")
+
+
+def test_well_formed_on_every_registered_preset():
+    from repro.hw.cosim import parse_netlist
+    seen = 0
+    for name, spec, src in _all_preset_sources():
+        assert well_formed(src), f"{name} {spec.label} not well-formed"
+        # and the cosim parser accepts the full emitted subset
+        net = parse_netlist(src)
+        assert net.pen == (spec.variant == "PEN"), spec.label
+        seen += 1
+    assert seen >= 48     # >= 8 presets x 2 variants x 3 placements
+
+
+def test_well_formed_rejects_broken_sources():
+    fr = _tiny_frozen(pen=True)
+    src = emit_dwn(fr, name="dwn_chk")
+    assert well_formed(src)
+    assert not well_formed(src.replace("endmodule", ""))
+    assert not well_formed(src.replace("always @* begin", "always @*"))
+    assert not well_formed(src.replace("(", "", 1))
+    assert not well_formed("")
+
+
+# ---------------------------------------------------------------------------
+# golden file: emit_dwn output pinned for one tiny frozen model
+# ---------------------------------------------------------------------------
+
+GOLDEN = Path(__file__).parent / "golden" / "dwn_tiny_pen.v"
+
+
+def _golden_frozen():
+    """A fully deterministic tiny PEN model (no RNG, no dataset): covers
+    negative thresholds, a duplicate threshold (the CSE alias path), the
+    -1.0 two's-complement extreme, and an off-grid rounding case."""
+    from repro.core.model import DWNConfig, FrozenDWN
+    cfg = DWNConfig(num_features=2, bits_per_feature=3, lut_counts=(10,),
+                    fan_in=6, num_classes=5)
+    th = np.array([[-0.75, -0.75, 0.5],
+                   [-1.0, 0.0, 0.4375]], np.float32)
+    mapping = (np.arange(60).reshape(10, 6) % 6).astype(np.int32)
+    tables = np.array([[(a * (j + 3) // 5 + j) % 2 for a in range(64)]
+                       for j in range(10)], np.int32)
+    return FrozenDWN(cfg, th, [mapping], [tables], input_frac_bits=4)
+
+
+def test_emit_dwn_golden_file():
+    """Silent codegen drift fails loudly: the emitted source for the
+    frozen golden model must match the checked-in file byte for byte.
+    Intentional emitter changes: REPRO_UPDATE_GOLDEN=1 pytest -k golden
+    regenerates it (then review the diff)."""
+    src = emit_dwn(_golden_frozen(), name="dwn_golden")
+    if os.environ.get("REPRO_UPDATE_GOLDEN") == "1":
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(src)
+    assert GOLDEN.exists(), "golden file missing; run with " \
+                            "REPRO_UPDATE_GOLDEN=1 to create it"
+    assert src == GOLDEN.read_text()
+    # the golden source pins the alias + negative-constant paths
+    assert "// dup threshold" in src
+    assert "$signed(5'h10)" in src              # -1.0 two's complement
+
+
+def test_golden_model_cosim_agrees():
+    """The pinned netlist is not just frozen text — it still computes
+    what the oracle computes."""
+    from repro.hw.cosim import verify_rtl
+    rng = np.random.default_rng(7)
+    x = rng.uniform(-1, 1, size=(64, 2)).astype(np.float32)
+    rep = verify_rtl(_golden_frozen(), x, backend="python",
+                     name="dwn_golden")
+    assert rep.counts_checked and rep.n_vectors == 64

@@ -168,3 +168,94 @@ def test_sweep_arch_threads_encoding_into_serving_model():
         model = build_dwn_model(cfg, data.x_train)
     assert model.dcfg.encoding == "gaussian"
     assert model.thresholds.shape == (16, 64)
+
+
+# ---------------------------------------------------------------------------
+# autodesign: Pareto choice + verified emission
+# ---------------------------------------------------------------------------
+
+def _fake_result(rows):
+    """SweepResult from (label-ish point, accuracy, luts) triples."""
+    from repro.sweep.results import PointResult
+    pts = []
+    for i, (acc, luts) in enumerate(rows):
+        p = SweepPoint("sm-10", "TEN", bits=8 * (i + 1))
+        pts.append(PointResult(point=p, accuracy=acc, total_luts=luts))
+    return SweepResult(grid="fake", settings={}, points=pts)
+
+
+def test_choose_design_min_luts_at_floor():
+    from repro.sweep.autodesign import AutodesignError, choose_design
+    res = _fake_result([(0.60, 100), (0.70, 200), (0.75, 400),
+                        (0.50, 150), (0.74, 390)])
+    c = choose_design(res, acc_floor=0.65)
+    assert c.result.total_luts == 200          # cheapest point >= floor
+    assert c.objective.startswith("min-luts")
+    # floor above the best accuracy -> hard failure, never a fallback
+    with pytest.raises(AutodesignError, match="best on"):
+        choose_design(res, acc_floor=0.90)
+
+
+def test_choose_design_max_acc_under_budget():
+    from repro.sweep.autodesign import AutodesignError, choose_design
+    res = _fake_result([(0.60, 100), (0.70, 200), (0.75, 400)])
+    c = choose_design(res, lut_budget=250)
+    assert c.result.accuracy == 0.70           # best affordable
+    assert choose_design(res, lut_budget=5000).result.accuracy == 0.75
+    with pytest.raises(AutodesignError, match="budget"):
+        choose_design(res, lut_budget=50)
+
+
+def test_choose_design_needs_exactly_one_objective():
+    from repro.sweep.autodesign import AutodesignError, choose_design
+    res = _fake_result([(0.6, 100)])
+    with pytest.raises(AutodesignError, match="exactly one"):
+        choose_design(res)
+    with pytest.raises(AutodesignError, match="exactly one"):
+        choose_design(res, acc_floor=0.5, lut_budget=100)
+    # a sweep without accuracy measurements cannot drive autodesign
+    res_noacc = _fake_result([(None, 100)])
+    res_noacc.points[0].accuracy = None
+    with pytest.raises(AutodesignError, match="accuracy"):
+        choose_design(res_noacc, acc_floor=0.5)
+
+
+def test_autodesign_emits_verified_rtl(tmp_path, tiny_result):
+    """End to end on the real tiny sweep: choose, rebuild, co-simulate,
+    write RTL + summary."""
+    import json
+    from repro.hw.verilog import well_formed
+    from repro.sweep.autodesign import choose_design, emit_verified
+    choice = choose_design(tiny_result, acc_floor=0.30)
+    summary = emit_verified(choice, FAST, out_dir=tmp_path,
+                            n_vectors=64, backend="python", log=None)
+    rtl = (tmp_path / "dwn_autodesign.v").read_text()
+    assert well_formed(rtl) and "module dwn_autodesign" in rtl
+    on_disk = json.loads((tmp_path / "autodesign.json").read_text())
+    assert on_disk["verification"]["n_vectors"] == 64
+    assert on_disk["verification"]["counts_checked"]
+    assert on_disk["choice"]["chosen"]["point"] == \
+        choice.point.to_dict()
+    assert summary["spec_label"] == on_disk["spec_label"]
+
+
+def test_autodesign_cli_flags(tmp_path, capsys):
+    """--autodesign through the sweep CLI: one command, verified RTL out,
+    non-zero exit when the floor is unreachable."""
+    from repro.launch.sweep import main
+    out = tmp_path / "ad"
+    rc = main(["--grid", "tiny", "--no-kernel", "--no-serve",
+               "--n-train", "512", "--n-test", "256", "--cache-dir", "",
+               "--autodesign", "--acc-floor", "0.30", "--cosim-n", "32",
+               "--autodesign-out", str(out)])
+    assert rc == 0
+    assert (out / "dwn_autodesign.v").exists()
+    assert "RTL verified bit-exact" in capsys.readouterr().out
+
+    rc_fail = main(["--grid", "tiny", "--no-kernel", "--no-serve",
+                    "--n-train", "512", "--n-test", "256",
+                    "--cache-dir", "",
+                    "--autodesign", "--acc-floor", "0.99",
+                    "--autodesign-out", str(tmp_path / "ad2")])
+    assert rc_fail == 1
+    assert not (tmp_path / "ad2" / "dwn_autodesign.v").exists()

@@ -92,6 +92,48 @@ def test_used_mask_and_dedup():
     assert n_full == 4
 
 
+def test_distinct_per_feature_edge_cases():
+    """T=1, constant features, and fully-unused features — the encoder
+    cost model's degenerate corners."""
+    # T=1: a single threshold per feature is one comparator when used
+    spec1 = ThermometerSpec(3, 1)
+    mapping = np.array([[0, 0, 1, 1, 0, 1]])     # uses f0, f1; never f2
+    mask = used_threshold_mask(mapping, spec1)
+    th = np.array([[0.25], [0.25], [0.75]], np.float32)
+    n, per = distinct_used_thresholds(th, mask, frac_bits=None)
+    assert (n, per) == (2, [1, 1, 0])
+
+    # constant feature: every threshold identical -> one comparator after
+    # CSE no matter how many bits are wired
+    spec = ThermometerSpec(2, 4)
+    mapping = np.array([[0, 1, 2, 3, 4, 5]])     # all of f0, f1:{0,1}
+    mask = used_threshold_mask(mapping, spec)
+    th = np.array([[0.5, 0.5, 0.5, 0.5],
+                   [-0.25, 0.3, 0.6, 0.9]], np.float32)
+    n, per = distinct_used_thresholds(th, mask, frac_bits=None)
+    assert per[0] == 1 and per[1] == 2 and n == 3
+
+    # quantization can only merge, never split
+    for frac in (1, 2, 4, 8):
+        nq, _ = distinct_used_thresholds(th, mask, frac_bits=frac)
+        assert nq <= n
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 16), st.integers(0, 9999))
+def test_distinct_counts_bounded_by_used_bits(F, T, seed):
+    rng = np.random.default_rng(seed)
+    spec = ThermometerSpec(F, T)
+    mapping = rng.integers(0, F * T, size=(max(2, F), 6))
+    mask = used_threshold_mask(mapping, spec)
+    th = np.sort(rng.uniform(-1, 1, (F, T)).astype(np.float32), axis=1)
+    n, per = distinct_used_thresholds(th, mask, frac_bits=3)
+    assert len(per) == F
+    for f in range(F):
+        assert 0 <= per[f] <= int(mask[f].sum())
+    assert n == sum(per)
+
+
 def test_normalize_range():
     x = np.random.default_rng(0).normal(0, 3, (100, 3)).astype(np.float32)
     xn, lo, hi = normalize_to_unit(x)
