@@ -24,9 +24,13 @@ interpret-mode emulation for the Pallas backend; the cross-backend
 
 Regression gate: every cell is compared against the committed
 ``BENCH_serve.json``; if any *previously-winning* backend regresses by
-more than 15% throughput, the bench exits non-zero (set
-``SERVE_BENCH_NO_GATE=1`` to record without gating, e.g. when moving the
-baseline to new hardware).
+more than 15% throughput, the flagged cells are **re-measured once**
+(fresh engine, same seeded stream) and the bench exits non-zero only if
+the second pass confirms the drop — interpret-mode wall times on a
+shared 2-core CI host jitter up to ~2x run-to-run, so a single slow pass
+is evidence of a noisy neighbor, not a regression.  Both passes are
+recorded in the ``regression`` block.  Set ``SERVE_BENCH_NO_GATE=1`` to
+record without gating, e.g. when moving the baseline to new hardware.
 """
 
 import json
@@ -99,6 +103,43 @@ def _regression_block(record, baseline):
     return block
 
 
+def _confirm_regressions(block) -> None:
+    """Re-measure each flagged cell once and keep only confirmed drops.
+
+    Wall-clock throughput on a shared CI host is noisy (interpret-mode
+    cells jitter up to ~2x run-to-run); a single slow pass must not fail
+    the build.  Each flagged (preset, winner-backend) cell gets one fresh
+    engine + the same seeded stream; the cell stays failed only if the
+    second pass *also* breaches the threshold.  Both passes land in the
+    recorded cell (``throughput`` / ``confirm_throughput``).
+    """
+    from repro.serving import ServingEngine
+
+    block["failed"] = []
+    for cell in block["cells"]:
+        if not cell["regressed"]:
+            continue
+        print(f"regression flagged for {cell['preset']}/{cell['backend']} "
+              f"({cell['delta_pct']}%); re-measuring to confirm...")
+        engine = ServingEngine(cell["preset"], max_bucket=BATCH,
+                               min_bucket=8, n_train=2000, verify=True,
+                               backend="auto", autotune=True)
+        engine.use_backend(cell["backend"])
+        engine.warmup(BATCH)
+        thru, _ = _stream(engine)
+        old_thru = cell["baseline_throughput"]
+        confirmed = thru < old_thru * (1 - REGRESSION_PCT / 100)
+        cell["confirm_throughput"] = thru
+        cell["confirm_delta_pct"] = (round((thru / old_thru - 1) * 100, 1)
+                                     if old_thru else 0.0)
+        cell["regressed"] = confirmed
+        if confirmed:
+            block["failed"].append(f"{cell['preset']}/{cell['backend']}")
+        else:
+            print(f"  not confirmed: second pass {thru} vs baseline "
+                  f"{old_thru} — treating first pass as noise")
+
+
 def run():
     from repro.serving import ServingEngine, available_backends
 
@@ -160,6 +201,10 @@ def run():
         }
 
     record["regression"] = _regression_block(record, baseline)
+    if record["regression"]["failed"]:
+        # flaky-host guard: a single slow pass needs a confirming second
+        # measurement before it can fail the build
+        _confirm_regressions(record["regression"])
     if baseline and "curve" in baseline:
         # the open-loop curve belongs to benchmarks/load_harness.py;
         # carry it through unchanged when this bench rewrites the record
@@ -172,7 +217,8 @@ def run():
     failed = record["regression"]["failed"]
     if failed:
         msg = (f"serve bench regression gate: previously-winning backends "
-               f"dropped >{REGRESSION_PCT:.0f}% throughput: {failed}")
+               f"dropped >{REGRESSION_PCT:.0f}% throughput in both "
+               f"measurement passes: {failed}")
         if os.environ.get("SERVE_BENCH_NO_GATE") == "1":
             print(f"WARNING (gate disabled): {msg}")
         else:

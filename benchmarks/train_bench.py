@@ -17,8 +17,10 @@ evaluator.  Units: seconds per epoch; ``steps_per_s`` counts optimizer
 steps.
 
 Also measured: the vmapped multi-seed batch trainer
-(``train_dwn_batch``) against sequential scan runs, and the loss/param
-trajectory parity between the engines at fixed seed.
+(``train_dwn_batch``) against sequential scan runs, the loss/param
+trajectory parity between the engines at fixed seed, and the resilient
+parallel sweep executor against the serial in-process grid runner on the
+tiny grid (``sweep_executor`` row — parallel-vs-serial wall-clock).
 
 Writes ``BENCH_train.json`` at the repo root (one record per run,
 overwritten) — the training-side companion of ``BENCH_kernels.json`` /
@@ -41,6 +43,54 @@ BATCH = 128
 # timed epochs (after the compile epoch); CI runs the 2-epoch shape
 EPOCHS = int(os.environ.get("TRAIN_BENCH_EPOCHS", "4"))
 SEEDS = (0, 1)        # batch-trainer axis
+SWEEP_WORKERS = int(os.environ.get("TRAIN_BENCH_SWEEP_WORKERS", "2"))
+
+
+def bench_sweep_executor(workers: int = SWEEP_WORKERS) -> dict:
+    """Tiny sweep grid, serial in-process vs the resilient parallel
+    executor (fresh caches for both, so each run computes every point).
+
+    On a 2-core CPU the parallel win is modest — worker spawn + per-process
+    JAX compile is amortized over only 6 points — but the row pins the
+    overhead so regressions in executor dispatch show up; on multi-core
+    hosts it approaches the worker count.
+    """
+    import shutil
+    import tempfile
+
+    from repro.sweep import (ExecutorSettings, SweepSettings, run_grid,
+                             run_grid_parallel)
+
+    settings = SweepSettings(n_train=512, n_test=256, accuracy=False,
+                             kernel=False, serve=False)
+    tmp = tempfile.mkdtemp(prefix="sweep_exec_bench_")
+    try:
+        t0 = time.perf_counter()
+        serial = run_grid("tiny", settings, cache_dir=f"{tmp}/serial")
+        serial_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        par = run_grid_parallel("tiny", settings,
+                                cache_dir=f"{tmp}/parallel",
+                                executor=ExecutorSettings(workers=workers))
+        parallel_s = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    assert len(par.points) == len(serial.points)
+    assert par.executor["failed"] == []
+    csv_row("train/sweep_executor/tiny", parallel_s * 1e6,
+            f"serial_s={serial_s:.2f};parallel_s={parallel_s:.2f};"
+            f"workers={workers}")
+    return {
+        "grid": "tiny", "points": len(par.points), "workers": workers,
+        "units": "wall-clock seconds for the full grid, fresh cache",
+        "serial_wall_s": round(serial_s, 3),
+        "parallel_wall_s": round(parallel_s, 3),
+        "speedup": round(serial_s / parallel_s, 2),
+        "executor": {k: par.executor[k]
+                     for k in ("computed", "restarts", "worker_deaths",
+                               "stragglers_redispatched",
+                               "workers_spawned")},
+    }
 
 
 def run(epochs: int = EPOCHS):
@@ -144,6 +194,7 @@ def run(epochs: int = EPOCHS):
             "speedup": round(t_seq / out.wall_s, 2),
             "data_parallel": out.data_parallel,
         },
+        "sweep_executor": bench_sweep_executor(),
     }
     with open(BENCH_JSON, "w") as fh:
         json.dump(record, fh, indent=2)

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Chaos-resume smoke: SIGKILL a parallel sweep mid-run, resume, assert
+ZERO recomputed points.
+
+The resilient executor's core invariant (docs/sweep_resilience.md) is
+that a killed run loses at most in-flight work: every completed point is
+already committed to the config-hash cache atomically, so the re-run
+computes exactly the complement.  This script proves it the hard way:
+
+1. launch ``python -m repro.launch.sweep --grid tiny --workers 2`` as a
+   subprocess in its own process group;
+2. poll the cache directory until at least one point has committed, then
+   SIGKILL the whole group (dispatcher AND workers — no drain, no
+   handlers, the closest a CI runner gets to node loss);
+3. count the committed cache entries C;
+4. re-run the same command to completion and load the sweep JSON;
+5. assert ``executor.cache_hits == C`` and ``executor.computed ==
+   total - C`` — zero recomputed points.
+
+Exit 0 on success, 1 with a diagnostic on any violated invariant.
+Used by CI (see .github/workflows/ci.yml); runnable locally:
+
+    PYTHONPATH=src python scripts/chaos_resume_smoke.py
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+GRID_SIZE = 6                      # --grid tiny
+KILL_DEADLINE_S = 600.0            # give the first point time to compile
+POLL_S = 0.25
+
+
+def cache_entries(cache_dir: str) -> list[str]:
+    try:
+        return sorted(f for f in os.listdir(cache_dir)
+                      if f.endswith(".json"))
+    except FileNotFoundError:
+        return []
+
+
+def sweep_cmd(workdir: str, out: str) -> list[str]:
+    return [sys.executable, "-m", "repro.launch.sweep",
+            "--grid", "tiny", "--workers", "2",
+            "--n-train", "512", "--n-test", "256",
+            "--no-accuracy", "--no-kernel", "--no-serve",
+            "--cache-dir", os.path.join(workdir, "cache"),
+            "--out", out]
+
+
+def main() -> int:
+    workdir = tempfile.mkdtemp(prefix="chaos_resume_")
+    cache_dir = os.path.join(workdir, "cache")
+    out_json = os.path.join(workdir, "sweep.json")
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env.setdefault("PYTHONPATH", "src")
+
+    # -- phase 1: launch and SIGKILL mid-run ------------------------------
+    print(f"[chaos] launching sweep (workdir {workdir})", flush=True)
+    proc = subprocess.Popen(sweep_cmd(workdir, out_json), env=env,
+                            start_new_session=True)   # own process group
+    deadline = time.monotonic() + KILL_DEADLINE_S
+    try:
+        while not cache_entries(cache_dir):
+            if proc.poll() is not None:
+                print(f"[chaos] FAIL: sweep exited (rc={proc.returncode}) "
+                      f"before any point committed", flush=True)
+                return 1
+            if time.monotonic() > deadline:
+                print("[chaos] FAIL: no cache entry within "
+                      f"{KILL_DEADLINE_S}s", flush=True)
+                return 1
+            time.sleep(POLL_S)
+        # SIGKILL the whole group: dispatcher + every worker, no drain
+        os.killpg(proc.pid, signal.SIGKILL)
+    finally:
+        if proc.poll() is None:
+            try:
+                os.killpg(proc.pid, signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+        proc.wait()
+    committed = cache_entries(cache_dir)
+    c = len(committed)
+    print(f"[chaos] SIGKILLed run with {c}/{GRID_SIZE} point(s) committed",
+          flush=True)
+    if c >= GRID_SIZE:
+        print("[chaos] FAIL: run finished before the kill landed; "
+              "nothing to resume", flush=True)
+        return 1
+
+    # -- phase 2: resume to completion ------------------------------------
+    rc = subprocess.call(sweep_cmd(workdir, out_json), env=env)
+    if rc != 0:
+        print(f"[chaos] FAIL: resume run exited {rc}", flush=True)
+        return 1
+    with open(out_json) as fh:
+        result = json.load(fh)
+    ex = result.get("executor") or {}
+    hits, computed = ex.get("cache_hits"), ex.get("computed")
+    points = len(result.get("points", []))
+    print(f"[chaos] resume: cache_hits={hits} computed={computed} "
+          f"points={points}", flush=True)
+
+    # -- the invariant -----------------------------------------------------
+    ok = True
+    if points != GRID_SIZE:
+        print(f"[chaos] FAIL: expected {GRID_SIZE} points, got {points}")
+        ok = False
+    if hits != c:
+        print(f"[chaos] FAIL: resume should hit the cache for every "
+              f"pre-kill point: cache_hits={hits} != committed={c}")
+        ok = False
+    if computed != GRID_SIZE - c:
+        print(f"[chaos] FAIL: recomputed points detected: "
+              f"computed={computed} != {GRID_SIZE - c} "
+              f"(= total - committed)")
+        ok = False
+    if ex.get("failed"):
+        print(f"[chaos] FAIL: failed points on resume: {ex['failed']}")
+        ok = False
+    if ok:
+        print(f"[chaos] OK: killed at {c}/{GRID_SIZE}, resumed with "
+              f"zero recomputed points", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,16 @@ Usage:
     python -m repro.launch.sweep --grid encoding --epochs 2 --no-serve
     python -m repro.launch.sweep --grid my_points.json --fresh
     python -m repro.launch.sweep --grid encoding --autodesign --acc-floor 0.70
+    python -m repro.launch.sweep --grid paper --workers 4 --artifact-dir \
+        results/sweep_artifacts
+
+``--workers N`` switches to the resilient parallel executor
+(``repro.sweep.executor``): grid points shard across N worker processes,
+each point runs under a bounded restart policy, completed points commit
+to the cache atomically (a killed run resumes with zero recomputed
+points), straggler points are speculatively re-dispatched, and SIGTERM
+drains gracefully (exit 0, resumable).  ``--chaos kill-after-N`` injects
+worker deaths for testing.  See docs/sweep_resilience.md.
 
 ``--autodesign`` walks the accuracy-vs-LUTs Pareto front (min LUTs at an
 accuracy floor, or max accuracy under ``--lut-budget``), rebuilds the
@@ -114,6 +124,22 @@ def main(argv=None):
     ap.add_argument("--fresh", action="store_true",
                     help="recompute every point (cache is still refreshed)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="worker processes for the resilient parallel "
+                         "executor (0 = serial in-process, -1 = auto)")
+    ap.add_argument("--max-restarts", type=int, default=2,
+                    help="per-point failure budget (worker deaths + "
+                         "in-worker retries) before the point is "
+                         "reported failed")
+    ap.add_argument("--artifact-dir", default="",
+                    help="checkpoint every computed point's packed "
+                         "DWNArtifact here (runtime.checkpoint."
+                         "save_artifact; '' disables)")
+    ap.add_argument("--no-speculate", action="store_true",
+                    help="disable straggler speculative re-dispatch")
+    ap.add_argument("--chaos", default="",
+                    help="fault injection: kill-after-N | raise-after-N | "
+                         "raise-always | stall-I:S (testing only)")
     ap.add_argument("--autodesign", action="store_true",
                     help="pick a design from the accuracy-vs-LUTs Pareto "
                          "front and emit its co-simulation-verified "
@@ -137,12 +163,43 @@ def main(argv=None):
         train_epochs=args.epochs, accuracy=not args.no_accuracy,
         kernel=not args.no_kernel, serve=args.serve,
         serve_backend=args.serve_backend)
-    result = run_grid(args.grid, settings,
-                      cache_dir=args.cache_dir or None,
-                      fresh=args.fresh, log=lambda m: print(m, flush=True))
+    log = lambda m: print(m, flush=True)                      # noqa: E731
+    if args.workers:
+        from ..sweep.executor import ExecutorSettings, run_grid_parallel
+        ex = ExecutorSettings(
+            workers=None if args.workers < 0 else args.workers,
+            max_restarts=args.max_restarts,
+            speculate=not args.no_speculate,
+            artifact_dir=args.artifact_dir or None,
+            chaos=args.chaos or None)
+        result = run_grid_parallel(args.grid, settings,
+                                   cache_dir=args.cache_dir or None,
+                                   fresh=args.fresh, executor=ex, log=log)
+    else:
+        result = run_grid(args.grid, settings,
+                          cache_dir=args.cache_dir or None,
+                          fresh=args.fresh, log=log,
+                          artifact_dir=args.artifact_dir or None)
 
     print()
     print(result.table())
+    exb = result.executor or {}
+    if exb:
+        print(f"\nexecutor: mode={exb.get('mode')} "
+              f"computed={exb.get('computed')} "
+              f"cache_hits={exb.get('cache_hits')} "
+              f"failed={len(exb.get('failed', []))} "
+              f"restarts={exb.get('restarts')} "
+              f"stragglers={exb.get('stragglers_redispatched')} "
+              f"wall={exb.get('wall_s')}s")
+    if exb.get("interrupted"):
+        print(f"PREEMPTED: {exb.get('remaining')} point(s) not run; "
+              f"completed work is cached — re-run the same command to "
+              f"resume with zero recomputed points")
+        if args.out:
+            result.save(args.out)
+            print(f"written partial {args.out}")
+        return 0
 
     front_a = result.accuracy_vs_luts_front()
     if front_a:
@@ -213,6 +270,12 @@ def main(argv=None):
 
     if failures:
         print(f"\npaper-tolerance FAILURES: {failures}")
+        return 1
+    failed_pts = [r.point.label for r in result.points if r.failed]
+    if failed_pts:
+        # the grid completed around them (no abort), but a failed point
+        # is still a failed run for CI purposes
+        print(f"\nFAILED points (restart budget exhausted): {failed_pts}")
         return 1
     return 0
 

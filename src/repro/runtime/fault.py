@@ -29,15 +29,33 @@ logger = logging.getLogger(__name__)
 
 
 class PreemptionHandler:
-    """SIGTERM -> drain at the next step boundary."""
+    """SIGTERM -> drain at the next step boundary.
 
-    def __init__(self, install: bool = True):
+    ``register`` is the signal-installation function (default
+    ``signal.signal``) — injectable so tests cover both the installed
+    path and the off-main-thread fallback without touching process
+    signal state.  When installation fails (``signal.signal`` raises
+    ``ValueError`` off the main thread), the handler degrades to a
+    cooperative flag: ``installed`` stays False, the fallback is
+    *logged* (not silent), and callers may still set ``requested``
+    directly.
+    """
+
+    def __init__(self, install: bool = True, *, register=None,
+                 signum: int = signal.SIGTERM):
         self.requested = False
+        self.installed = False
+        self.signum = signum
         if install:
+            register = register or signal.signal
             try:
-                signal.signal(signal.SIGTERM, self._on_signal)
-            except ValueError:                   # non-main thread (tests)
-                pass
+                register(signum, self._on_signal)
+                self.installed = True
+            except ValueError:                   # non-main thread
+                logger.warning(
+                    "cannot install signal %d handler off the main thread; "
+                    "falling back to the cooperative `requested` flag",
+                    signum)
 
     def _on_signal(self, signum, frame):
         logger.warning("preemption signal received; draining")
@@ -132,14 +150,50 @@ class Supervisor:
         return handle
 
 
-class FaultInjector:
-    """Deterministic crash injection for tests: raises on given steps."""
+    # -- supervised unit of work -------------------------------------------
 
-    def __init__(self, crash_steps: set[int]):
+    def supervise(self, fn: Callable[[], object], *,
+                  label: str = "task", on_retry=None):
+        """Run an arbitrary callable under the restart policy.
+
+        The checkpointed ``run`` loop above supervises a *step function*;
+        ``supervise`` is the same bounded-restart control logic for a
+        one-shot unit of work whose durable state lives elsewhere (e.g. a
+        sweep grid point, persisted through the result cache + artifact
+        store rather than a step checkpoint).  Retries ``fn`` with
+        backoff until it returns; when the restart budget is exhausted
+        the last exception propagates to the caller.
+        """
+        while True:
+            try:
+                return fn()
+            except Exception:
+                logger.exception("supervised %s failed", label)
+                if not self._register_crash():
+                    logger.error("restart budget exhausted for %s", label)
+                    raise
+                if on_retry:
+                    on_retry(self.restarts)
+                time.sleep(self.policy.backoff_s)
+
+
+class FaultInjector:
+    """Deterministic crash injection for tests: raises on given steps.
+
+    ``every_step=True`` makes the injector fire on *every* visit to a
+    crash step, not just the first — the crash-loop shape a bounded
+    ``RestartPolicy`` must abort on instead of spinning forever.
+    """
+
+    def __init__(self, crash_steps: set[int], *, every_step: bool = False):
         self.crash_steps = set(crash_steps)
+        self.every_step = every_step
         self.crashed: set[int] = set()
+        self.fired = 0
 
     def maybe_crash(self, step: int):
-        if step in self.crash_steps and step not in self.crashed:
+        if step in self.crash_steps and (self.every_step
+                                         or step not in self.crashed):
             self.crashed.add(step)
+            self.fired += 1
             raise RuntimeError(f"injected fault at step {step}")

@@ -53,15 +53,40 @@ class StragglerMonitor:
         self._t0 = None
         return self.report(dt)
 
+    def _baseline(self) -> tuple[float, float, float] | None:
+        """(median, MAD, z-scale) of the window, or None below min_samples.
+
+        The z-scale is floored at 5% of the median (and an absolute 1e-6):
+        a *constant-time* window has MAD == 0, and without the floor the
+        robust z would divide by ~zero and flag sub-percent jitter as a
+        straggler (or, at median 0, divide by exactly zero).
+        """
+        if len(self.times) < self.min_samples:
+            return None
+        s = sorted(self.times)
+        med = s[len(s) // 2]
+        mad = sorted(abs(t - med) for t in s)[len(s) // 2]
+        scale = max(1.4826 * mad, 1e-6, 0.05 * med)
+        return med, mad, scale
+
+    def threshold_s(self) -> float | None:
+        """Wall time above which the *next* report would flag, or None
+        while the window is below ``min_samples``.  Lets a dispatcher
+        check *in-flight* work against the flag rule without waiting for
+        the slow step to finish (speculative re-dispatch)."""
+        base = self._baseline()
+        if base is None:
+            return None
+        med, _, scale = base
+        return med + self.z_threshold * scale
+
     def report(self, step_time_s: float) -> StragglerEvent | None:
         """Feed one step time; returns an event iff this step is flagged."""
         self._step += 1
         ev = None
-        if len(self.times) >= self.min_samples:
-            s = sorted(self.times)
-            med = s[len(s) // 2]
-            mad = sorted(abs(t - med) for t in s)[len(s) // 2]
-            scale = max(1.4826 * mad, 1e-6, 0.01 * med)
+        base = self._baseline()
+        if base is not None:
+            med, mad, scale = base
             z = (step_time_s - med) / scale
             if z > self.z_threshold:
                 self.consecutive += 1

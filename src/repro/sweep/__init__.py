@@ -19,13 +19,15 @@ from . import artifacts
 from .autodesign import (AutodesignChoice, AutodesignError, choose_design,
                          emit_verified)
 from .cache import SweepCache, config_hash, point_key
+from .executor import ChaosSpec, ExecutorSettings, run_grid_parallel
 from .grid import GRIDS, SweepPoint, load_grid
 from .pipeline import SweepRunner, SweepSettings, run_grid
 from .results import PointResult, SweepResult, pareto_front
 
 __all__ = [
-    "AutodesignChoice", "AutodesignError", "GRIDS", "PointResult",
-    "SweepCache", "SweepPoint", "SweepResult", "SweepRunner",
-    "SweepSettings", "artifacts", "choose_design", "config_hash",
-    "emit_verified", "load_grid", "pareto_front", "point_key", "run_grid",
+    "AutodesignChoice", "AutodesignError", "ChaosSpec", "ExecutorSettings",
+    "GRIDS", "PointResult", "SweepCache", "SweepPoint", "SweepResult",
+    "SweepRunner", "SweepSettings", "artifacts", "choose_design",
+    "config_hash", "emit_verified", "load_grid", "pareto_front",
+    "point_key", "run_grid", "run_grid_parallel",
 ]

@@ -18,6 +18,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
+import uuid
 from pathlib import Path
 
 
@@ -83,6 +85,22 @@ def point_key(point, settings) -> str:
 class SweepCache:
     """Filesystem cache of completed sweep points.
 
+    Crash/concurrency contract (what the resilient executor relies on):
+
+    * ``put`` is **atomic**: the entry is serialized to a uniquely-named
+      temp file in the cache root, fsync'd, and published with
+      ``os.replace`` — a reader never observes a half-written entry, and
+      a writer killed mid-``put`` leaves only an orphan ``*.tmp`` (swept
+      by the next ``put``), never a corrupt key.  Unique temp names make
+      concurrent writers (parallel sweep workers, possibly of the *same*
+      key after a straggler re-dispatch) last-writer-wins safe.
+    * ``get`` treats a corrupt or non-dict entry as a **miss** — the
+      point recomputes; the bad file is unlinked so it cannot shadow the
+      recomputed result.
+
+    ``stats`` counts hits / misses / corrupt entries for the run, which
+    is how the chaos-resume CI smoke asserts "zero recomputed points".
+
     Args:
       root: cache directory (created on first ``put``); None disables
         caching entirely (``get`` always misses, ``put`` is a no-op).
@@ -90,6 +108,7 @@ class SweepCache:
 
     def __init__(self, root: str | Path | None):
         self.root = Path(root) if root else None
+        self.stats = {"hits": 0, "misses": 0, "corrupt": 0}
 
     def _path(self, key: str) -> Path:
         assert self.root is not None
@@ -98,29 +117,59 @@ class SweepCache:
     def get(self, key: str) -> dict | None:
         """Return the cached result dict for ``key``, or None on miss.
 
-        A corrupt cache file (interrupted write) reads as a miss, never an
-        error — the point just recomputes.
+        A corrupt cache file (e.g. a non-atomic writer killed mid-write,
+        or disk damage) reads as a miss, never an error — the entry is
+        unlinked and the point just recomputes.
         """
         if self.root is None:
             return None
         p = self._path(key)
-        if not p.exists():
-            return None
         try:
             with open(p) as fh:
-                return json.load(fh)
-        except (json.JSONDecodeError, OSError):
+                out = json.load(fh)
+            if not isinstance(out, dict):
+                raise json.JSONDecodeError("not an object", "", 0)
+        except FileNotFoundError:
+            self.stats["misses"] += 1
             return None
+        except (json.JSONDecodeError, OSError):
+            self.stats["corrupt"] += 1
+            self.stats["misses"] += 1
+            p.unlink(missing_ok=True)
+            return None
+        self.stats["hits"] += 1
+        return out
 
     def put(self, key: str, result: dict) -> None:
-        """Store a result dict under ``key`` (atomic rename write)."""
+        """Store a result dict under ``key`` (atomic, concurrent-safe)."""
         if self.root is None:
             return
         self.root.mkdir(parents=True, exist_ok=True)
-        tmp = self._path(key).with_suffix(".tmp")
-        with open(tmp, "w") as fh:
-            json.dump(result, fh, indent=1)
-        tmp.replace(self._path(key))
+        self._sweep_orphans()
+        tmp = self.root / f".{key}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp"
+        try:
+            with open(tmp, "w") as fh:
+                json.dump(result, fh, indent=1)
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, self._path(key))
+        finally:
+            tmp.unlink(missing_ok=True)
+
+    def _sweep_orphans(self) -> None:
+        """Delete temp files abandoned by killed writers (best-effort;
+        a *live* concurrent writer's temp is at most re-created)."""
+        for orphan in self.root.glob(".*.tmp"):
+            try:
+                if orphan.stat().st_mtime < _now() - 3600:
+                    orphan.unlink(missing_ok=True)
+            except OSError:
+                pass
+
+
+def _now() -> float:
+    import time
+    return time.time()
 
 
 __all__ = ["SweepCache", "config_hash", "point_key"]

@@ -288,26 +288,12 @@ class SweepRunner:
         return res
 
 
-def run_grid(grid: str | list, settings: SweepSettings | None = None, *,
-             cache_dir: str | None = "results/sweep_cache",
-             fresh: bool = False, log=None) -> SweepResult:
-    """Run a whole grid through the pipeline, with incremental caching.
-
-    Args:
-      grid: a named grid / JSON path (see ``grid.load_grid``) or an
-        explicit list of :class:`SweepPoint`.
-      settings: fidelity knobs; defaults to :class:`SweepSettings`().
-      cache_dir: result-cache root; None disables caching.
-      fresh: ignore (but still refresh) the cache.
-      log: optional ``print``-like progress callback.
-
-    Returns the :class:`SweepResult` over every point.
+def scan_cache(points, settings: SweepSettings, cache: SweepCache,
+               fresh: bool = False) -> dict[int, PointResult]:
+    """Index -> cached :class:`PointResult` for every point whose key is
+    present and loadable.  Corrupt entries and stale schemas read as
+    misses (the point recomputes); ``fresh`` misses everything.
     """
-    settings = settings or SweepSettings()
-    points = load_grid(grid) if isinstance(grid, str) else list(grid)
-    name = grid if isinstance(grid, str) else "custom"
-    cache = SweepCache(cache_dir)
-    runner: SweepRunner | None = None
     hits: dict[int, PointResult] = {}
     for i, point in enumerate(points):
         hit = None if fresh else cache.get(point_key(point, settings))
@@ -318,6 +304,58 @@ def run_grid(grid: str | list, settings: SweepSettings | None = None, *,
                 hits[i] = res
             except (TypeError, KeyError):      # stale schema: recompute
                 pass
+    return hits
+
+
+def persist_artifact(runner: SweepRunner, point: SweepPoint, key: str,
+                     artifact_dir: str | None) -> str | None:
+    """Save the point's packed :class:`~repro.dwn.DWNArtifact` under
+    ``artifact_dir/<label>-<key[:8]>`` via ``runtime.checkpoint.
+    save_artifact`` (atomic, sha256-verified).  Returns the checkpoint
+    path, or None when ``artifact_dir`` is unset."""
+    if not artifact_dir:
+        return None
+    from pathlib import Path
+
+    from ..runtime.checkpoint import save_artifact
+    art = runner.artifact_for(point)
+    art.pack()
+    safe = point.label.replace("/", "_").replace("@", "")
+    dest = Path(artifact_dir) / f"{safe}-{key[:8]}"
+    return str(save_artifact(dest, art))
+
+
+def run_grid(grid: str | list, settings: SweepSettings | None = None, *,
+             cache_dir: str | None = "results/sweep_cache",
+             fresh: bool = False, log=None,
+             artifact_dir: str | None = None) -> SweepResult:
+    """Run a whole grid through the pipeline, with incremental caching.
+
+    This is the **serial** in-process runner; the fault-tolerant parallel
+    executor (worker processes, bounded restarts, straggler re-dispatch,
+    preemption draining) is :func:`repro.sweep.executor.run_grid_parallel`
+    — both persist through the same cache, so runs can be freely resumed
+    across the two.
+
+    Args:
+      grid: a named grid / JSON path (see ``grid.load_grid``) or an
+        explicit list of :class:`SweepPoint`.
+      settings: fidelity knobs; defaults to :class:`SweepSettings`().
+      cache_dir: result-cache root; None disables caching.
+      fresh: ignore (but still refresh) the cache.
+      log: optional ``print``-like progress callback.
+      artifact_dir: when set, every computed point's packed artifact is
+        checkpointed here (``runtime.checkpoint.save_artifact``).
+
+    Returns the :class:`SweepResult` over every point.
+    """
+    settings = settings or SweepSettings()
+    points = load_grid(grid) if isinstance(grid, str) else list(grid)
+    name = grid if isinstance(grid, str) else "custom"
+    cache = SweepCache(cache_dir)
+    t_start = time.perf_counter()
+    runner: SweepRunner | None = None
+    hits = scan_cache(points, settings, cache, fresh)
     misses = [p for i, p in enumerate(points) if i not in hits]
     if misses:                                 # lazy: all-hit runs are free
         runner = SweepRunner(settings)
@@ -333,7 +371,9 @@ def run_grid(grid: str | list, settings: SweepSettings | None = None, *,
         if res is None:
             t0 = time.perf_counter()
             res = runner.run_point(point)
-            cache.put(point_key(point, settings), res.to_dict())
+            key = point_key(point, settings)
+            cache.put(key, res.to_dict())
+            persist_artifact(runner, point, key, artifact_dir)
             if log:
                 log(f"[{i + 1}/{len(points)}] {point.label}: "
                     f"{res.total_luts} LUTs "
@@ -341,8 +381,15 @@ def run_grid(grid: str | list, settings: SweepSettings | None = None, *,
         elif log:
             log(f"[{i + 1}/{len(points)}] {point.label}: cached")
         out.append(res)
+    executor = {"mode": "serial", "workers": 0,
+                "computed": len(misses), "cache_hits": len(hits),
+                "failed": [], "restarts": 0,
+                "stragglers_redispatched": 0, "interrupted": False,
+                "remaining": 0, "cache": dict(cache.stats),
+                "wall_s": round(time.perf_counter() - t_start, 3)}
     return SweepResult(grid=name, settings=dataclasses.asdict(settings),
-                       points=out)
+                       points=out, executor=executor)
 
 
-__all__ = ["SweepRunner", "SweepSettings", "run_grid"]
+__all__ = ["SweepRunner", "SweepSettings", "persist_artifact", "run_grid",
+           "scan_cache"]

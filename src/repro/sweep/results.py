@@ -47,6 +47,8 @@ class PointResult:
     serve_p50_ms: float | None = None         # compute latency per microbatch
     serve_backend: str | None = None
     cached: bool = False
+    failed: bool = False                      # executor gave up on this point
+    error: str | None = None                  # last failure (when failed)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -81,11 +83,19 @@ def pareto_front(items: Sequence, cost: Callable, score: Callable) -> list:
 
 @dataclasses.dataclass
 class SweepResult:
-    """A completed sweep: grid + settings provenance + per-point rows."""
+    """A completed sweep: grid + settings provenance + per-point rows.
+
+    ``executor`` carries the run's execution provenance (serial or
+    parallel): worker count, computed vs cache-hit point counts, failed
+    points, straggler re-dispatches, restart count, and whether the run
+    was preempted mid-grid — the counters the chaos-resume CI smoke
+    asserts on (see docs/sweep_resilience.md).
+    """
 
     grid: str
     settings: dict
     points: list
+    executor: dict | None = None
 
     # -- views ---------------------------------------------------------
 
@@ -106,6 +116,10 @@ class SweepResult:
                 "|---|---|---|---|---|---|---|---|---|---|---|")
         rows = []
         for r in self.points:
+            if r.failed:
+                rows.append(f"| {r.point.label} | FAILED ({r.error}) "
+                            + "| - " * 9 + "|")
+                continue
             acc = f"{r.accuracy:.3f}" if r.accuracy is not None else "-"
             err = (f"{r.lut_error_pct:+.1f}"
                    if r.lut_error_pct is not None else "-")
@@ -122,15 +136,18 @@ class SweepResult:
     # -- (de)serialization ---------------------------------------------
 
     def to_dict(self) -> dict:
-        return {"grid": self.grid, "settings": self.settings,
-                "points": [r.to_dict() for r in self.points],
-                "pareto": {
-                    "accuracy_vs_luts":
-                        [r.point.label for r in self.accuracy_vs_luts_front()],
-                    "throughput_vs_luts":
-                        [r.point.label
-                         for r in self.throughput_vs_luts_front()],
-                }}
+        out = {"grid": self.grid, "settings": self.settings,
+               "points": [r.to_dict() for r in self.points],
+               "pareto": {
+                   "accuracy_vs_luts":
+                       [r.point.label for r in self.accuracy_vs_luts_front()],
+                   "throughput_vs_luts":
+                       [r.point.label
+                        for r in self.throughput_vs_luts_front()],
+               }}
+        if self.executor is not None:
+            out["executor"] = self.executor
+        return out
 
     def save(self, path: str | Path) -> None:
         """Write the sweep (points + frontiers) as one JSON artifact."""
@@ -142,7 +159,8 @@ class SweepResult:
         with open(path) as fh:
             d = json.load(fh)
         return cls(grid=d["grid"], settings=d["settings"],
-                   points=[PointResult.from_dict(p) for p in d["points"]])
+                   points=[PointResult.from_dict(p) for p in d["points"]],
+                   executor=d.get("executor"))
 
 
 __all__ = ["PointResult", "SweepResult", "pareto_front"]

@@ -133,3 +133,143 @@ def test_straggler_monitor_tolerates_jitter():
     events = [mon.report(0.1 + 0.002 * rng.standard_normal())
               for _ in range(100)]
     assert all(e is None for e in events)
+
+
+def test_straggler_monitor_constant_times_mad_zero():
+    """MAD == 0 (perfectly constant window) must not divide-by-zero or
+    flag sub-percent jitter; the z-scale floors at 5% of the median."""
+    mon = StragglerMonitor(min_samples=8, z_threshold=4.0)
+    for _ in range(20):
+        assert mon.report(0.100) is None
+    # 4% above median: inside the floored threshold, not a straggler
+    assert mon.report(0.104) is None
+    # 25x the median clearly is
+    ev = mon.report(2.5)
+    assert ev is not None and ev.mad_s == 0.0 and ev.z > 4
+
+
+def test_straggler_monitor_zero_median_window():
+    mon = StragglerMonitor(min_samples=4)
+    for _ in range(8):
+        mon.report(0.0)
+    assert mon.report(0.0) is None             # no ZeroDivisionError
+    assert mon.report(1.0) is not None
+
+
+def test_straggler_threshold_s():
+    mon = StragglerMonitor(min_samples=8, z_threshold=4.0)
+    assert mon.threshold_s() is None           # below min_samples
+    for _ in range(10):
+        mon.report(0.100)
+    thr = mon.threshold_s()
+    # med + 4 * max(1.4826*MAD, 1e-6, 0.05*med) = 0.1 + 4*0.005
+    assert thr == pytest.approx(0.120)
+    # the flag rule agrees with the advertised threshold
+    assert mon.report(thr * 0.99) is None
+    assert mon.report(thr * 1.50) is not None
+
+
+def test_preemption_handler_injectable_register():
+    calls = []
+    pre = PreemptionHandler(register=lambda s, h: calls.append((s, h)),
+                            signum=15)
+    assert pre.installed
+    assert calls == [(15, pre._on_signal)]
+    pre._on_signal(15, None)
+    assert pre.requested
+
+
+def test_preemption_handler_fallback_logged(caplog):
+    """Off the main thread signal.signal raises ValueError; the handler
+    must degrade to the cooperative flag and LOG the fallback."""
+    def register(signum, handler):
+        raise ValueError("signal only works in main thread")
+
+    import logging
+    with caplog.at_level(logging.WARNING, logger="repro.runtime.fault"):
+        pre = PreemptionHandler(register=register)
+    assert not pre.installed
+    assert any("falling back" in r.message for r in caplog.records)
+    pre.requested = True                       # cooperative path still works
+    assert pre.requested
+
+
+def test_supervisor_crash_loop_aborts_not_spins(tmp_path):
+    """A fault firing on *every* visit to the same step is a crash loop:
+    the bounded RestartPolicy must abort after max_restarts, not retry
+    forever."""
+    inj = FaultInjector({3}, every_step=True)
+    steps_run = []
+
+    def step(handle):
+        inj.maybe_crash(handle.step)
+        steps_run.append(handle.step)
+        handle.state = {"w": handle.state["w"] + 1}
+        handle.step += 1
+        return handle
+
+    sup = Supervisor(str(tmp_path), save_every=2,
+                     policy=RestartPolicy(max_restarts=3, backoff_s=0))
+    with pytest.raises(RuntimeError, match="injected fault at step 3"):
+        sup.run(step, init_state={"w": jnp.zeros(1)}, total_steps=9)
+    assert inj.fired == 4                      # 3 retries + aborting attempt
+    assert sup.restarts == 4
+    # each retry resumed from the committed step-2 checkpoint: only step 2
+    # re-runs per attempt, the loop never spins past the faulty step
+    assert max(steps_run) == 2
+
+
+def test_supervisor_resumes_from_latest_committed_checkpoint(tmp_path):
+    """A transient fault restores from the *latest committed* checkpoint
+    (step 4 with save_every=2 when crashing at step 5), not from scratch."""
+    inj = FaultInjector({5})
+    resumed_from = []
+
+    def step(handle):
+        resumed_from.append(handle.step)
+        inj.maybe_crash(handle.step)
+        handle.state = {"w": handle.state["w"] + 1}
+        handle.step += 1
+        return handle
+
+    sup = Supervisor(str(tmp_path), save_every=2,
+                     policy=RestartPolicy(max_restarts=2, backoff_s=0))
+    h = sup.run(step, init_state={"w": jnp.zeros(1)}, total_steps=8)
+    assert h.step == 8
+    assert float(h.state["w"][0]) == 8.0
+    # the attempt after the crash started at 4 (latest committed), not 0
+    i = resumed_from.index(5)
+    assert resumed_from[i + 1] == 4
+
+
+def test_supervise_retries_transient_then_succeeds(tmp_path):
+    attempts = []
+    retries = []
+
+    def flaky():
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    sup = Supervisor(str(tmp_path),
+                     policy=RestartPolicy(max_restarts=5, backoff_s=0))
+    out = sup.supervise(flaky, label="unit", on_retry=retries.append)
+    assert out == "ok"
+    assert len(attempts) == 3
+    assert retries == [1, 2]
+    assert sup.restarts == 2
+
+
+def test_supervise_budget_exhausted_raises(tmp_path):
+    n = [0]
+
+    def broken():
+        n[0] += 1
+        raise ValueError("always broken")
+
+    sup = Supervisor(str(tmp_path),
+                     policy=RestartPolicy(max_restarts=2, backoff_s=0))
+    with pytest.raises(ValueError, match="always broken"):
+        sup.supervise(broken)
+    assert n[0] == 3                           # bounded: 1 + max_restarts

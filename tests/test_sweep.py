@@ -119,6 +119,54 @@ def test_cache_incremental_rerun(tmp_path):
     assert point_key(pts[0], FAST) != point_key(pts[0], other)
 
 
+def test_cache_corrupt_entry_is_a_miss(tmp_path):
+    """A corrupt cache file (killed non-atomic writer, disk damage) must
+    read as a miss — unlinked and recomputed, never an exception."""
+    from repro.sweep import SweepCache
+    cache = SweepCache(tmp_path)
+    cache.put("k1", {"x": 1})
+    assert cache.get("k1") == {"x": 1}
+    # truncated JSON
+    (tmp_path / "k2.json").write_text('{"x": ')
+    assert cache.get("k2") is None
+    assert not (tmp_path / "k2.json").exists()     # unlinked, can't shadow
+    # valid JSON but not an object
+    (tmp_path / "k3.json").write_text('[1, 2]')
+    assert cache.get("k3") is None
+    assert cache.get("nope") is None               # plain miss
+    assert cache.stats == {"hits": 1, "misses": 3, "corrupt": 2}
+
+
+def test_cache_put_is_atomic(tmp_path):
+    """put publishes via unique-temp + os.replace: no *.tmp survives a
+    completed put, and a same-key overwrite is last-writer-wins."""
+    from repro.sweep import SweepCache
+    cache = SweepCache(tmp_path)
+    cache.put("k", {"v": 1})
+    cache.put("k", {"v": 2})
+    assert cache.get("k") == {"v": 2}
+    assert list(tmp_path.glob("*.tmp")) == []
+    assert list(tmp_path.glob(".*.tmp")) == []
+    # disabled cache is inert
+    off = SweepCache(None)
+    off.put("k", {"v": 3})
+    assert off.get("k") is None
+
+
+def test_cache_corrupt_entry_recomputes_in_pipeline(tmp_path):
+    """End to end: corrupting the cached entry forces a recompute that
+    repairs the cache (same numbers afterwards)."""
+    pts = [SweepPoint("sm-10", "TEN")]
+    first = run_grid(pts, FAST, cache_dir=tmp_path)
+    key = point_key(pts[0], FAST)
+    (tmp_path / f"{key}.json").write_text("garbage{{{")
+    second = run_grid(pts, FAST, cache_dir=tmp_path)
+    assert not second.points[0].cached             # recomputed, no crash
+    assert second.points[0].total_luts == first.points[0].total_luts
+    third = run_grid(pts, FAST, cache_dir=tmp_path)
+    assert third.points[0].cached                  # cache repaired
+
+
 def test_grid_resolution(tmp_path):
     assert len(tiny_grid()) == 6
     assert len(paper_grid()) == 8
