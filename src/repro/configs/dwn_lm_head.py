@@ -1,0 +1,33 @@
+"""DWN-head-on-LM spec preset (``dwn-lm-head``).
+
+The served form of ``examples/dwn_head_lm.py``: a 16-feature 5-class DWN
+head whose features are pooled from a frozen reduced qwen3-8b backbone
+(the ``lm-head`` workload).  Registered as an arch alias (for report
+shapes) and a ``DWNSpec`` preset with ``workload="lm-head"`` and
+``backbone="qwen3-8b"``; ``ServingEngine(..., dwn_head=...)`` serves a
+packed artifact of this spec alongside LM decode in one process.
+"""
+from .base import ArchConfig
+from .registry import register
+
+register(ArchConfig(
+    name="dwn-lm-head",
+    family="dwn",
+    num_layers=1,
+    d_model=16,               # pooled backbone features
+    num_heads=0, num_kv_heads=0, d_ff=0,
+    vocab_size=5,             # teacher-projection classes
+    dwn_luts=50,
+    dwn_bits=64,
+    dwn_fused=True,
+    dwn_datapath="fused-packed",
+    source="examples/dwn_head_lm.py promoted (DESIGN.md §6)",
+))
+
+
+# --- spec preset (repro.dwn) -----------------------------------------------
+from ..dwn.spec import register_preset as _register_spec
+
+_register_spec("dwn-lm-head", preset="lm-head-50", workload="lm-head",
+               bits=64, placement="uniform", backbone="qwen3-8b",
+               datapath="fused-packed")

@@ -41,5 +41,6 @@ def _load_all():
         return
     from . import (granite_moe_3b_a800m, mixtral_8x7b, whisper_large_v3,  # noqa
                    mamba2_1_3b, qwen3_8b, phi3_mini_3_8b, qwen2_7b,
-                   qwen3_14b, recurrentgemma_2b, llava_next_34b, dwn_jsc)
+                   qwen3_14b, recurrentgemma_2b, llava_next_34b, dwn_jsc,
+                   dwn_mnist, dwn_lm_head)
     _LOADED = True

@@ -13,6 +13,8 @@ counts/predictions compared exactly) or any stage fails.
 Usage:
     python -m repro.dwn.smoke --out artifact_smoke.json --epochs 1
     python -m repro.dwn.smoke --preset sm-10 --variant TEN --epochs 0
+    python -m repro.dwn.smoke --workload mnist --preset mnist-sm \
+        --variant TEN --bits 8 --epochs 1
 """
 
 from __future__ import annotations
@@ -24,7 +26,6 @@ import tempfile
 
 import numpy as np
 
-from ..data.jsc import load_jsc
 from .artifact import DWNArtifact
 from .spec import DWNSpec
 
@@ -33,8 +34,10 @@ def run(spec: DWNSpec, *, epochs: int, n_train: int, n_test: int,
         batch: int, seed: int, ckpt_dir: str, log=print) -> dict:
     """Drive one spec through the full lifecycle; returns the JSON-able
     stage-by-stage record (key ``roundtrip_bit_exact`` is the gate)."""
-    out: dict = {"spec": spec.to_dict(), "fingerprint": spec.fingerprint()}
-    data = load_jsc(n_train, n_test, seed=seed)
+    from ..workloads import load_workload
+    out: dict = {"spec": spec.to_dict(), "fingerprint": spec.fingerprint(),
+                 "workload": spec.workload}
+    data = load_workload(spec.workload, n_train, n_test, seed=seed)
 
     log(f"[1/6] train: {spec.label}, {epochs} epoch(s)")
     art = DWNArtifact(spec).train(data, epochs=epochs, batch=batch,
@@ -87,6 +90,10 @@ def run(spec: DWNSpec, *, epochs: int, n_train: int, n_test: int,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workload", default="jsc",
+                    help="registered workload the spec trains/serves on "
+                         "(jsc | mnist | ...; --preset must be one of "
+                         "its tiers)")
     ap.add_argument("--preset", default="sm-50")
     ap.add_argument("--variant", default="PEN", choices=["TEN", "PEN"])
     ap.add_argument("--bits", type=int, default=64,
@@ -109,7 +116,8 @@ def main(argv=None) -> int:
     spec = DWNSpec(
         preset=args.preset, variant=args.variant, bits=args.bits,
         placement=args.placement,
-        input_bits=args.input_bits if args.variant == "PEN" else None)
+        input_bits=args.input_bits if args.variant == "PEN" else None,
+        workload=args.workload)
     ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="dwn_artifact_")
     log = (lambda *a, **k: None) if args.quiet else print
     out = run(spec, epochs=args.epochs, n_train=args.n_train,

@@ -33,10 +33,18 @@ VARIANTS = ("TEN", "PEN")
 #: shard-aligned optimization variant).
 GROUPINGS = ("contig", "strided")
 
-#: JSC tier -> LUT-layer width m (Table I model sizes).
+#: JSC tier -> LUT-layer width m (Table I model sizes).  Kept for
+#: back-compat; per-workload tiers live on the workload registry entries
+#: (``repro.workloads.get_workload(name).presets``).
 TIERS = {name: cfg.lut_counts[-1] for name, cfg in JSC_PRESETS.items()}
 
 _LUTS_TO_TIER = {m: name for name, m in TIERS.items()}
+
+
+def _workload_presets(workload: str):
+    """Tier name -> base DWNConfig for a workload (registry lookup)."""
+    from ..workloads import get_workload
+    return get_workload(workload).presets
 
 
 def _serving_datapaths() -> list[str]:
@@ -64,6 +72,12 @@ class DWNSpec:
         "float-oracle" | "auto") — validated against the registry at
         construction.
       grouping: popcount grouping ("contig" | "strided").
+      workload: registered workload name the spec trains/serves on
+        ("jsc" | "mnist" | "lm-head" | ...); fixes the feature/class
+        geometry and which preset tiers are valid.
+      backbone: arch name of a feature-extractor backbone stage, for
+        specs whose features come from a model (the DWN-head LM); None
+        inherits the workload's backbone (also None for plain datasets).
 
     Raises ``ValueError`` at construction for any invalid combination;
     every message says what to change.
@@ -76,12 +90,19 @@ class DWNSpec:
     input_bits: int | None = None
     datapath: str = "fused-packed"
     grouping: str = "contig"
+    workload: str = "jsc"
+    backbone: str | None = None
 
     def __post_init__(self):
-        if self.preset not in TIERS:
+        try:
+            presets = _workload_presets(self.workload)
+        except KeyError as e:
+            raise ValueError(str(e.args[0])) from None
+        if self.preset not in presets:
             raise ValueError(
-                f"unknown DWN preset {self.preset!r}; known JSC tiers: "
-                f"{sorted(TIERS)} (each fixes the LUT-layer width m)")
+                f"unknown DWN preset {self.preset!r} for workload "
+                f"{self.workload!r}; known tiers: {sorted(presets)} "
+                f"(each fixes the LUT-layer width m)")
         if self.variant not in VARIANTS:
             raise ValueError(
                 f"unknown encoding variant {self.variant!r}; choose 'TEN' "
@@ -127,7 +148,7 @@ class DWNSpec:
     @property
     def luts(self) -> int:
         """LUT-layer width m of the preset tier."""
-        return TIERS[self.preset]
+        return _workload_presets(self.workload)[self.preset].lut_counts[-1]
 
     @property
     def frac_bits(self) -> int | None:
@@ -137,14 +158,24 @@ class DWNSpec:
     @property
     def label(self) -> str:
         b = "" if self.input_bits is None else f"@{self.input_bits}b"
-        return (f"{self.preset}/{self.variant}{b}/T{self.bits}/"
+        wl = "" if self.workload == "jsc" else f"{self.workload}:"
+        return (f"{wl}{self.preset}/{self.variant}{b}/T{self.bits}/"
                 f"{self.placement}")
+
+    @property
+    def effective_backbone(self) -> str | None:
+        """Backbone arch name: the explicit ``backbone`` field, else the
+        workload's registered backbone, else None (plain dataset)."""
+        if self.backbone is not None:
+            return self.backbone
+        from ..workloads import get_workload
+        return get_workload(self.workload).backbone
 
     def dwn_config(self) -> DWNConfig:
         """The core model config (``repro.core.model.DWNConfig``) this
         spec trains and freezes — bit-identical to what the pre-spec glue
         constructed by hand."""
-        return dataclasses.replace(JSC_PRESETS[self.preset],
+        return dataclasses.replace(_workload_presets(self.workload)[self.preset],
                                    bits_per_feature=self.bits,
                                    encoding=self.placement)
 
@@ -152,12 +183,13 @@ class DWNSpec:
         """A servable (unregistered) ArchConfig view of this spec, for
         code that still speaks ``ArchConfig`` (ServingEngine reports,
         dryrun shapes)."""
+        cfg = self.dwn_config()
         return ArchConfig(
             name=name or f"dwn-{self.preset}-T{self.bits}-{self.placement}",
             family="dwn",
-            num_layers=1, d_model=16,
+            num_layers=1, d_model=cfg.num_features,
             num_heads=0, num_kv_heads=0, d_ff=0,
-            vocab_size=5,
+            vocab_size=cfg.num_classes,
             dwn_luts=self.luts, dwn_bits=self.bits,
             dwn_encoding=self.placement, dwn_fused=True,
             dwn_datapath=self.datapath, dwn_grouping=self.grouping,
@@ -166,7 +198,14 @@ class DWNSpec:
     # -- (de)serialization ---------------------------------------------
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        # default workload/backbone are *omitted* so every pre-workload
+        # fingerprint, sweep-cache key, and checkpoint stays valid
+        if d["workload"] == "jsc":
+            del d["workload"]
+        if d["backbone"] is None:
+            del d["backbone"]
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "DWNSpec":
@@ -217,7 +256,8 @@ class DWNSpec:
         return cls(preset=point.preset, variant=point.variant,
                    bits=point.bits, placement=point.placement,
                    input_bits=point.input_bits, datapath=datapath,
-                   grouping=grouping)
+                   grouping=grouping,
+                   workload=getattr(point, "workload", "jsc"))
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +326,12 @@ def resolve_spec(target) -> DWNSpec:
         if has_spec(target):
             return get_spec(target)
         from ..configs import get_arch
-        return DWNSpec.from_arch(get_arch(target))
+        target = get_arch(target)
+    # ArchConfigs that shadow a registered spec preset (the non-JSC
+    # families register both) resolve by name; only nameless/legacy
+    # configs bridge through the JSC-tier from_arch path.
+    if has_spec(getattr(target, "name", "")):
+        return get_spec(target.name)
     return DWNSpec.from_arch(target)
 
 

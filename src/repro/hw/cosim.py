@@ -625,8 +625,9 @@ def verify_rtl(target, x=None, *, n: int = 256, backend: str = "auto",
 
     Args:
       target: a ``DWNArtifact`` at stage >= frozen, or a ``FrozenDWN``.
-      x: (B, F) float feature vectors; defaults to ``n`` real JSC test
-        vectors (the surrogate split, seeded).
+      x: (B, F) float feature vectors; defaults to ``n`` real test
+        vectors of the artifact spec's workload (JSC for a bare
+        16-feature ``FrozenDWN``, seeded uniform vectors otherwise).
       n: number of default vectors when ``x`` is None.
       backend: "python" (pure evaluator), "iverilog" (external simulator,
         raises :class:`SimulatorError` if absent), or "auto" (python
@@ -648,8 +649,21 @@ def verify_rtl(target, x=None, *, n: int = 256, backend: str = "auto",
 
     frozen, spec_label = _resolve_frozen(target)
     if x is None:
-        from ..data.jsc import load_jsc
-        x = load_jsc(512, max(n, 1), seed=seed).x_test[:n]
+        if hasattr(target, "spec"):
+            # artifact: real test vectors of the spec's own workload
+            from ..workloads import load_workload
+            x = load_workload(target.spec.workload, 512, max(n, 1),
+                              seed=seed).x_test[:n]
+        elif frozen.cfg.num_features == 16:
+            # bare FrozenDWN at the JSC geometry: the legacy default
+            from ..data.jsc import load_jsc
+            x = load_jsc(512, max(n, 1), seed=seed).x_test[:n]
+        else:
+            # bare FrozenDWN of unknown provenance: seeded vectors over
+            # the encoder's input domain
+            rng = np.random.default_rng(seed)
+            x = rng.uniform(-1.0, 1.0,
+                            (n, frozen.cfg.num_features)).astype(np.float32)
     x = np.asarray(x, np.float32)
     if src is None:
         src = emit_dwn(frozen, name=name, pipeline=pipeline)
@@ -721,17 +735,18 @@ def verify_rtl(target, x=None, *, n: int = 256, backend: str = "auto",
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Co-simulate emitted DWN RTL against the packed "
-                    "oracle on real JSC vectors.")
+                    "oracle on real vectors of each preset's workload.")
     ap.add_argument("--presets", default="dwn-jsc-sm,dwn-jsc-md,dwn-jsc-lg",
-                    help="comma-separated registered spec presets")
+                    help="comma-separated registered spec presets (any "
+                         "workload, e.g. dwn-mnist-sm)")
     ap.add_argument("--variants", default="TEN,PEN",
                     help="encoding variants to verify per preset")
     ap.add_argument("--input-bits", type=int, default=9,
                     help="PEN fixed-point input width (total bits)")
     ap.add_argument("--n", type=int, default=256,
-                    help="JSC test vectors per verification")
+                    help="workload test vectors per verification")
     ap.add_argument("--n-train", type=int, default=2000,
-                    help="JSC training samples (threshold fit)")
+                    help="workload training samples (threshold fit)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "python", "iverilog"])
@@ -746,9 +761,9 @@ def main(argv=None) -> int:
 
     import dataclasses as dc
 
-    from ..data.jsc import load_jsc
     from ..dwn import DWNArtifact
     from ..dwn.spec import get_spec
+    from ..workloads import load_workload
 
     if args.require_simulator and simulator_available() is None:
         print("cosim: --require-simulator set but no iverilog/vvp on "
@@ -759,16 +774,24 @@ def main(argv=None) -> int:
               "PATH", file=sys.stderr)
         return 2
 
-    data = load_jsc(args.n_train, max(args.n, 1), seed=args.seed)
+    splits: dict = {}                          # workload name -> split
+
+    def data_for(workload: str):
+        if workload not in splits:
+            splits[workload] = load_workload(
+                workload, args.n_train, max(args.n, 1), seed=args.seed)
+        return splits[workload]
+
     models: dict = {}
     rows, failures = [], 0
     for preset in [p for p in args.presets.split(",") if p]:
         base = get_spec(preset)
+        data = data_for(base.workload)
         for variant in [v for v in args.variants.split(",") if v]:
             spec = base if base.variant == variant else dc.replace(
                 base, variant=variant,
                 input_bits=None if variant == "TEN" else args.input_bits)
-            mkey = (spec.preset, spec.bits, spec.placement)
+            mkey = (spec.workload, spec.preset, spec.bits, spec.placement)
             if mkey not in models:
                 ten = dc.replace(spec, variant="TEN", input_bits=None)
                 a = DWNArtifact(ten).fit(data.x_train, seed=args.seed)

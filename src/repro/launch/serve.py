@@ -53,6 +53,23 @@ def dwn_serve(target, args) -> int:
     ArchConfig (legacy), a ``DWNSpec`` (from ``--spec``), or a packed
     ``DWNArtifact``.
     """
+    import dataclasses
+    import warnings
+
+    from ..dwn import resolve_spec
+    workload = getattr(args, "workload", None)
+    if workload is None:
+        if resolve_spec(target).workload == "jsc":
+            warnings.warn(
+                "serving a DWN without --workload falls back to the "
+                "implicit JSC default; pass --workload jsc (or any "
+                "registered workload) explicitly",
+                DeprecationWarning, stacklevel=2)
+    else:
+        spec = resolve_spec(target)
+        if workload != spec.workload:
+            # validated override: the preset must exist for that workload
+            target = dataclasses.replace(spec, workload=workload)
     # --reduced shrinks the request volume, not the model: the datapath
     # (T=200 encode, m LUTs) is the thing being served.
     n_train = 2000 if args.reduced else 20000
@@ -106,12 +123,22 @@ def dwn_serve(target, args) -> int:
 
 
 def lm_serve(cfg, args) -> int:
-    """LM prefill + decode serving through the engine."""
+    """LM prefill + decode serving through the engine.
+
+    With ``--dwn-head`` (a DWNArtifact checkpoint path or a spec preset
+    name like ``dwn-lm-head``) the engine also serves DWN classification
+    on its own backbone features: the same drain serves the LM batch and
+    a ``classify`` batch — one process, both request kinds.
+    """
     engine = ServingEngine(
         cfg, reduced=args.reduced, prompt_len=args.prompt_len, gen=args.gen,
-        model_parallel=args.model_parallel, seed=args.seed)
+        model_parallel=args.model_parallel, seed=args.seed,
+        dwn_head=args.dwn_head or None)
     B = args.batch or 4
     engine.submit(engine.make_request(B, seed=args.seed))
+    if args.dwn_head:
+        engine.submit(engine.make_request(B, seed=args.seed + 1,
+                                          classify=True))
     done = engine.drain()
 
     rep = engine.report()
@@ -119,6 +146,10 @@ def lm_serve(cfg, args) -> int:
     assert tokens.shape == (B, args.gen)
     rep["batch"] = B
     rep["sample"] = tokens[0, :8].tolist()
+    if args.dwn_head:
+        head = [r for r in done if "pred" in r.result]
+        assert head and head[0].result["pred"].shape == (B,)
+        rep["head_sample"] = head[0].result["pred"][:8].tolist()
     print(json.dumps(rep))
     return 0
 
@@ -133,6 +164,17 @@ def main(argv=None):
                          '\'{"preset": "sm-50", "variant": "PEN", '
                          '"input_bits": 9}\' — the typed replacement for '
                          "--arch dwn-jsc-* strings")
+    ap.add_argument("--workload", default=None,
+                    help="DWN mode: registered workload to serve "
+                         "(jsc | mnist | ...; default: the spec's own "
+                         "workload — omitting it for a JSC spec warns, "
+                         "the implicit default is deprecated)")
+    ap.add_argument("--dwn-head", default="",
+                    help="LM mode: attach a packed DWN classification "
+                         "head (DWNArtifact checkpoint path or spec "
+                         "preset name, e.g. dwn-lm-head) and serve "
+                         "classify requests alongside LM decode in the "
+                         "same engine")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=0,
                     help="request batch size (default: 4 for LM archs, "

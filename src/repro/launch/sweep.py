@@ -99,8 +99,8 @@ def check_paper_points(result) -> list[str]:
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--grid", default="tiny",
-                    help="named grid (tiny|paper|encoding) or a JSON file "
-                         "of point dicts")
+                    help="named grid (tiny|paper|encoding|mnist-tiny|"
+                         "mnist) or a JSON file of point dicts")
     ap.add_argument("--out", default="",
                     help="write the SweepResult JSON here")
     ap.add_argument("--plots", action="store_true",
@@ -153,7 +153,7 @@ def main(argv=None):
     ap.add_argument("--autodesign-out", default="results/autodesign",
                     help="directory for the verified RTL + summary JSON")
     ap.add_argument("--cosim-n", type=int, default=256,
-                    help="JSC vectors for the RTL verification")
+                    help="workload test vectors for the RTL verification")
     ap.add_argument("--cosim-backend", default="auto",
                     choices=["auto", "python", "iverilog"])
     args = ap.parse_args(argv)
@@ -200,6 +200,20 @@ def main(argv=None):
             result.save(args.out)
             print(f"written partial {args.out}")
         return 0
+
+    shares = [r for r in result.points
+              if not r.failed and r.encoder_share is not None]
+    if shares:
+        # the paper's core finding, reported per grid: how much of the
+        # total LUT cost the thermometer encoder is (PEN pays it
+        # on-chip; TEN's encoder share is 0 by construction)
+        print("\nencoder LUT share (encoder / total):")
+        for r in sorted(shares, key=lambda r: -r.encoder_share)[:8]:
+            enc = r.luts.get("encoder", 0)
+            rest = max(r.total_luts - enc, 1)
+            print(f"  {100 * r.encoder_share:5.1f}%  ({enc} of "
+                  f"{r.total_luts} LUTs, {enc / rest:.2f}x the rest)  "
+                  f"{r.point.label}")
 
     front_a = result.accuracy_vs_luts_front()
     if front_a:

@@ -77,24 +77,43 @@ def dwn_train(cfg, args) -> int:
     """Scan-compiled DWN training: one device program per epoch block,
     multi-seed runs vmapped into a single program.
 
-    The arch string resolves to a typed ``repro.dwn.DWNSpec``; with
-    ``--artifact-dir`` each trained model is carried through the full
-    lifecycle (freeze → pack) and checkpointed as a ``DWNArtifact``.
+    The arch string resolves to a typed ``repro.dwn.DWNSpec``; the spec's
+    workload (or ``--workload``) picks the dataset through the registry
+    (``repro.workloads``).  With ``--artifact-dir`` each trained model is
+    carried through the full lifecycle (freeze → pack) and checkpointed
+    as a ``DWNArtifact``.
     """
-    from ..data.jsc import load_jsc
+    import dataclasses
+    import warnings
+
     from ..dwn import DWNArtifact, resolve_spec
     from ..training import ScanTrainer, train_dwn_batch
+    from ..workloads import get_workload
 
     spec = resolve_spec(args.arch)
+    workload = getattr(args, "workload", None)
+    if workload is None:
+        if spec.workload == "jsc":
+            warnings.warn(
+                "training a DWN without --workload falls back to the "
+                "implicit JSC default; pass --workload jsc (or any "
+                "registered workload) explicitly",
+                DeprecationWarning, stacklevel=2)
+    elif workload != spec.workload:
+        # validated override: the preset must exist for that workload
+        spec = dataclasses.replace(spec, workload=workload)
     dcfg = spec.dwn_config()
+    wl = get_workload(spec.workload)
     n_train = 4000 if args.reduced else 20000
-    data = load_jsc(n_train, max(1000, n_train // 4), seed=args.seed)
+    data = wl.load(n_train, max(1000, n_train // 4), seed=args.seed)
+    n_train = data.x_train.shape[0]              # workload caps may clamp
     seeds = [int(s) for s in str(args.seeds).split(",") if s != ""]
     batch = args.batch if args.batch > 0 else 128
     epochs = args.epochs
 
     rep = {"arch": cfg.name, "engine": "scan", "epochs": epochs,
            "batch": batch, "n_train": n_train, "seeds": seeds,
+           "workload": spec.workload,
            "spec": spec.to_dict(), "spec_fingerprint": spec.fingerprint()}
     trained: list[tuple[int, object, object, float]] = []
     if len(seeds) == 1:
@@ -148,6 +167,11 @@ def dwn_train(cfg, args) -> int:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
+    ap.add_argument("--workload", default=None,
+                    help="DWN mode: registered workload to train on "
+                         "(jsc | mnist | lm-head | ...; default: the "
+                         "spec's own workload — omitting it for a JSC "
+                         "spec warns, the implicit default is deprecated)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=0,

@@ -1,6 +1,7 @@
 """ServingEngine: one submit/drain API over both served families.
 
-DWN archs (``family == "dwn"``) serve batched JSC classification through a
+DWN archs (``family == "dwn"``) serve batched classification of their
+spec's workload (``repro.workloads``: JSC, MNIST, ...) through a
 pluggable datapath backend (``serving.backends``), microbatched into
 power-of-two buckets (``serving.scheduler``), and sharded data-parallel
 across the host mesh with ``shard_map`` when a bucket divides the device
@@ -10,7 +11,10 @@ broken datapath.
 
 LM archs serve the existing prefill + token-by-token decode loop (KV /
 SSM / LRU caches) one request per step, through the same queue and the
-same per-request queue/compute latency accounting.
+same per-request queue/compute latency accounting.  With ``dwn_head=``
+an LM engine *also* serves a packed DWN classification head on its own
+backbone's pooled features (``classify`` requests), so one process
+serves LM decode and DWN classification side by side.
 
 Two serving modes share the datapath and its compile/autotune caches:
 
@@ -93,8 +97,14 @@ class ServingEngine:
       reduced: LM archs: serve the tiny same-family variant.  DWN archs:
         kept for CLI symmetry (the model is never shrunk — the datapath
         is the thing being served; callers shrink the request volume).
-      n_train: JSC training rows used to fit thermometer thresholds.
+      n_train: training rows (of the spec's workload) used to fit
+        thermometer thresholds.
       prompt_len / gen / model_parallel: LM serving shape knobs.
+      dwn_head: LM engines only — attach a packed DWN classification
+        head on the backbone's pooled features (a ``DWNArtifact``, a
+        checkpoint path, or a spec-preset name like ``"dwn-lm-head"``).
+        ``classify`` requests then route through the same queue as LM
+        decode: one engine, both request kinds, one process.
     """
 
     def __init__(self, arch: str | ArchConfig, *,
@@ -104,7 +114,7 @@ class ServingEngine:
                  autotune: bool | None = None,
                  reduced: bool = False, n_train: int = 2000,
                  seed: int = 0, prompt_len: int = 32, gen: int = 16,
-                 model_parallel: int = 1):
+                 model_parallel: int = 1, dwn_head=None):
         from ..dwn import DWNArtifact, DWNSpec, has_spec, get_spec
         self.artifact: "DWNArtifact | None" = None
         self.spec: "DWNSpec | None" = None
@@ -140,12 +150,20 @@ class ServingEngine:
         #: session's loop counters (report() merges the live session in)
         self._async_done: list[AsyncRequest] = []
         self._async_counters: dict = {}
+        self.head_artifact = None
+        self.head_bit_exact: bool | None = None
+        self._head_served = 0
         if self.family == "dwn":
+            assert dwn_head is None, \
+                "dwn_head attaches to an LM engine (the head rides the " \
+                "backbone); DWN archs already serve classification"
             self._init_dwn(cfg, backend, n_train, data_parallel, verify)
         else:
             if reduced:
                 self.cfg = cfg = cfg.reduced()
             self._init_lm(cfg, prompt_len, gen, model_parallel)
+            if dwn_head is not None:
+                self._init_dwn_head(dwn_head, verify)
 
     # ------------------------------------------------------------------
     # DWN classification path
@@ -153,10 +171,11 @@ class ServingEngine:
 
     def _init_dwn(self, cfg: ArchConfig, backend: str | None,
                   n_train: int, data_parallel: bool, verify: bool):
-        from ..data.jsc import load_jsc
         from ..dwn import DWNArtifact
-        self.data = load_jsc(n_train, max(self.scheduler.max_bucket, 512),
-                             seed=self.seed)
+        from ..workloads import load_workload
+        self.data = load_workload(self.spec.workload, n_train,
+                                  max(self.scheduler.max_bucket, 512),
+                                  seed=self.seed)
         # one construction path: the artifact lifecycle.  A caller-built
         # artifact is served as-is; a spec-only engine fits thresholds on
         # its own data split (exactly the pre-spec build_dwn_model init).
@@ -308,6 +327,82 @@ class ServingEngine:
             self.params = jax.jit(lambda k: mod.init_params(k, cfg, tp),
                                   out_shardings=p_shard)(key)
 
+    # ------------------------------------------------------------------
+    # DWN head on the LM backbone (dwn_head=)
+    # ------------------------------------------------------------------
+
+    def _init_dwn_head(self, head, verify: bool) -> None:
+        """Attach a packed DWN classification head on this engine's own
+        backbone: pooled-feature extraction (``workloads.lm_head.
+        pool_features`` — the same pooling the head trained on) feeds
+        ``apply_hard_packed`` of the head artifact.  ``classify``
+        requests then serve through the same queue/drain as LM decode.
+        """
+        from pathlib import Path
+
+        from ..core.model import apply_hard, apply_hard_packed
+        from ..core.classifier import predict
+        from ..dwn import DWNArtifact, resolve_spec
+        from ..workloads.lm_head import pool_features
+        if isinstance(head, DWNArtifact):
+            art = head
+        elif Path(str(head)).exists():
+            from ..runtime.checkpoint import load_artifact
+            art = load_artifact(head)
+        else:
+            art = DWNArtifact(resolve_spec(head))
+        if art.stage == "spec":
+            from ..workloads import load_workload
+            data = load_workload(art.spec.workload, 512, 64, seed=self.seed)
+            art.fit(data.x_train, seed=self.seed)
+        if art.stage == "trained":
+            art.freeze()
+        art.pack()
+        self.head_artifact = art
+        cfg, tp = self.cfg, self.tp
+        mod = api.module_for(cfg)
+        frozen = art.frozen
+
+        @jax.jit
+        def head_step(params, toks):
+            logits, _, _ = mod.forward(params, cfg, {"tokens": toks}, tp=tp)
+            feats = pool_features(logits)
+            counts = apply_hard_packed(frozen, feats)
+            return feats, counts, predict(counts)
+
+        self._jhead = head_step
+        if verify:
+            # startup cross-check: the packed head must agree bit-exactly
+            # with the float oracle on this backbone's real features
+            rng = np.random.default_rng(self.seed)
+            toks = jnp.asarray(rng.integers(
+                0, cfg.vocab_size, (8, self.prompt_len)).astype(np.int32))
+            with self.mesh:
+                feats, counts, _ = self._jhead(self.params, toks)
+            oracle = np.asarray(apply_hard(frozen, feats))
+            self.head_bit_exact = bool(
+                np.array_equal(np.asarray(counts), oracle))
+            assert self.head_bit_exact, \
+                "packed DWN head disagrees with the apply_hard oracle"
+
+    def _head_step(self, batch: dict) -> dict:
+        """Serve one classify request: tokens -> backbone features ->
+        packed DWN head (counts + predictions)."""
+        assert self.head_artifact is not None, \
+            "no DWN head attached: construct with dwn_head=..."
+        toks = jnp.asarray(batch["tokens"])
+        with self.mesh:
+            feats, counts, pred = self._jhead(self.params, toks)
+        pred.block_until_ready()
+        self._head_served += int(toks.shape[0])
+        return {"counts": np.asarray(counts), "pred": np.asarray(pred),
+                "features": np.asarray(feats)}
+
+    def _lm_or_head_step(self, batch: dict) -> dict:
+        if isinstance(batch, dict) and batch.get("classify"):
+            return self._head_step(batch)
+        return self._lm_step(batch)
+
     def _lm_step(self, batch: dict) -> dict:
         cfg = self.cfg
         t0 = time.perf_counter()
@@ -336,13 +431,17 @@ class ServingEngine:
     # unified submit / drain API
     # ------------------------------------------------------------------
 
-    def make_request(self, size: int, seed: int = 0) -> Any:
+    def make_request(self, size: int, seed: int = 0, *,
+                     classify: bool = False) -> Any:
         """Synthesize one request payload.
 
         Args:
           size: samples (DWN: feature rows drawn from the test split) or
             sequences (LM: random token prompts of ``prompt_len``).
           seed: draw seed, so streams are reproducible.
+          classify: LM engines with a ``dwn_head``: mark the request for
+            the DWN head (tokens -> pooled features -> packed classify)
+            instead of prefill/decode.
 
         Returns the payload in the shape :meth:`submit` expects.
         """
@@ -350,6 +449,13 @@ class ServingEngine:
         if self.family == "dwn":
             sel = rng.integers(0, self.data.x_test.shape[0], size)
             return self.data.x_test[sel]
+        if classify:
+            assert self.head_artifact is not None, \
+                "classify requests need dwn_head= at construction"
+            return {"tokens": rng.integers(
+                0, self.cfg.vocab_size,
+                (size, self.prompt_len)).astype(np.int32),
+                "classify": True}
         key = jax.random.PRNGKey(seed)
         batch = {"tokens": np.asarray(jax.random.randint(
             key, (size, self.prompt_len), 0, self.cfg.vocab_size))}
@@ -386,10 +492,11 @@ class ServingEngine:
         if self.family == "dwn":
             done = self.scheduler.drain_batched(self._monitored_step)
         else:
-            done = self.scheduler.drain_serial(self._lm_step)
+            done = self.scheduler.drain_serial(self._lm_or_head_step)
             self._lm_stats.extend((r.result["prefill_s"],
                                    r.result["decode_s_per_tok"])
-                                  for r in done)
+                                  for r in done
+                                  if "prefill_s" in r.result)
         self._drain_wall += time.perf_counter() - t0
         return done
 
@@ -589,6 +696,15 @@ class ServingEngine:
                     float(np.mean([s[0] for s in self._lm_stats])), 3)
                 out["decode_s_per_tok"] = round(
                     float(np.mean([s[1] for s in self._lm_stats])), 4)
+            if self.head_artifact is not None:
+                out["dwn_head"] = {
+                    "spec": self.head_artifact.spec.to_dict(),
+                    "spec_fingerprint":
+                        self.head_artifact.spec.fingerprint(),
+                    "artifact_stage": self.head_artifact.stage,
+                    "bit_exact_vs_oracle": self.head_bit_exact,
+                    "served": self._head_served,
+                }
         return out
 
 

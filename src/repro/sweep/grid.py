@@ -42,8 +42,9 @@ class SweepPoint:
     """One point of the encoding design space.
 
     Attributes:
-      preset: JSC tier ("sm-10" | "sm-50" | "md-360" | "lg-2400") — fixes
-        the LUT-layer width m.
+      preset: workload tier (JSC: "sm-10" | "sm-50" | "md-360" |
+        "lg-2400"; MNIST: "mnist-{sm,md,lg}") — fixes the LUT-layer
+        width m.
       variant: "TEN" (off-chip encoding, bits arrive pre-encoded) or
         "PEN" (on-chip encoder at ``input_bits``).
       bits: thermometer bits per feature T (encoder resolution).
@@ -51,6 +52,8 @@ class SweepPoint:
         "gaussian").
       input_bits: PEN input width in total bits (1 sign + n fractional);
         None for TEN.
+      workload: registered workload name the point trains/evaluates on
+        (default "jsc"; see ``repro.workloads``).
     """
 
     preset: str
@@ -58,6 +61,7 @@ class SweepPoint:
     bits: int = 200
     placement: str = "distributive"
     input_bits: int | None = None
+    workload: str = "jsc"
 
     def __post_init__(self):
         assert self.variant in VARIANTS, self.variant
@@ -71,10 +75,17 @@ class SweepPoint:
     @property
     def label(self) -> str:
         b = "" if self.input_bits is None else f"@{self.input_bits}b"
-        return f"{self.preset}/{self.variant}{b}/T{self.bits}/{self.placement}"
+        wl = "" if self.workload == "jsc" else f"{self.workload}:"
+        return (f"{wl}{self.preset}/{self.variant}{b}/T{self.bits}/"
+                f"{self.placement}")
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        # the default workload is omitted so pre-workload cache keys and
+        # saved grid/result JSON stay valid
+        if d["workload"] == "jsc":
+            del d["workload"]
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "SweepPoint":
@@ -111,7 +122,31 @@ def encoding_grid() -> list[SweepPoint]:
     return pts
 
 
-GRIDS = {"tiny": tiny_grid, "paper": paper_grid, "encoding": encoding_grid}
+def mnist_tiny_grid() -> list[SweepPoint]:
+    """mnist-sm x {TEN, PEN@5b, PEN@8b} + mnist-md TEN — the MNIST CI
+    smoke grid (synthetic fallback; seconds on CPU at small T)."""
+    pts = [SweepPoint("mnist-sm", "TEN", bits=8, workload="mnist")]
+    for ib in (5, 8):
+        pts.append(SweepPoint("mnist-sm", "PEN", bits=8, input_bits=ib,
+                              workload="mnist"))
+    pts.append(SweepPoint("mnist-md", "TEN", bits=8, workload="mnist"))
+    return pts
+
+
+def mnist_grid() -> list[SweepPoint]:
+    """{sm,md,lg} x {TEN, PEN@5b, PEN@8b} — the encoding-LUT-share
+    analysis on the second dataset (sm/md at T=8, lg at T=16)."""
+    pts = []
+    for preset, T in (("mnist-sm", 8), ("mnist-md", 8), ("mnist-lg", 16)):
+        pts.append(SweepPoint(preset, "TEN", bits=T, workload="mnist"))
+        for ib in (5, 8):
+            pts.append(SweepPoint(preset, "PEN", bits=T, input_bits=ib,
+                                  workload="mnist"))
+    return pts
+
+
+GRIDS = {"tiny": tiny_grid, "paper": paper_grid, "encoding": encoding_grid,
+         "mnist-tiny": mnist_tiny_grid, "mnist": mnist_grid}
 
 
 def load_grid(name_or_path: str) -> list[SweepPoint]:
@@ -134,4 +169,5 @@ def load_grid(name_or_path: str) -> list[SweepPoint]:
 
 
 __all__ = ["GRIDS", "PAPER_FT_BITS", "SweepPoint", "VARIANTS",
-           "encoding_grid", "load_grid", "paper_grid", "tiny_grid"]
+           "encoding_grid", "load_grid", "mnist_grid", "mnist_tiny_grid",
+           "paper_grid", "tiny_grid"]

@@ -40,7 +40,6 @@ import numpy as np
 from ..core import eval_accuracy_hard_packed, init_dwn, train_dwn
 from ..core.model import DWNConfig
 from ..core.warmstart import warmstart_dwn
-from ..data.jsc import load_jsc
 from ..dwn import DWNArtifact, DWNSpec
 from ..hw.cost import dwn_hw_report
 from ..kernels.fused import ops as fused_ops
@@ -55,7 +54,8 @@ class SweepSettings:
     """Fidelity/measurement knobs shared by every point of one sweep.
 
     Attributes:
-      n_train / n_test: JSC split sizes (samples).
+      n_train / n_test: dataset split sizes (samples; per-workload caps
+        in ``repro.workloads`` may clamp them).
       data_seed / seed: dataset and model-init PRNG seeds.
       train_epochs: gradient epochs per model; 0 = warmstart only.
       train_batch / lr: training shape (match ``benchmarks/common.py``).
@@ -99,11 +99,27 @@ class SweepRunner:
 
     def __init__(self, settings: SweepSettings):
         self.settings = settings
-        self.data = load_jsc(settings.n_train, settings.n_test,
-                             seed=settings.data_seed)
-        self._models: dict[tuple, tuple] = {}       # (preset,T,pl) -> (cfg,p,b)
+        self._data: dict[str, object] = {}          # workload -> split
+        self._models: dict[tuple, tuple] = {}       # (wl,preset,T,pl) -> (cfg,p,b)
         self._artifacts: dict[SweepPoint, DWNArtifact] = {}
         self._serve: dict[tuple, tuple] = {}        # point key -> (thru, p50)
+
+    # -- data ----------------------------------------------------------
+
+    def data_for(self, workload: str):
+        """The workload's canonical split at the sweep's fidelity knobs
+        (loaded once per workload per runner)."""
+        if workload not in self._data:
+            from ..workloads import load_workload
+            s = self.settings
+            self._data[workload] = load_workload(
+                workload, s.n_train, s.n_test, seed=s.data_seed)
+        return self._data[workload]
+
+    @property
+    def data(self):
+        """Back-compat alias: the JSC split (pre-registry callers)."""
+        return self.data_for("jsc")
 
     # -- spec / model / artifact ---------------------------------------
 
@@ -117,20 +133,22 @@ class SweepRunner:
     def _cfg_for(point: SweepPoint) -> DWNConfig:
         return DWNSpec.from_point(point).dwn_config()
 
-    def _init_model(self, cfg: DWNConfig):
+    def _init_model(self, cfg: DWNConfig, workload: str = "jsc"):
         s = self.settings
+        data = self.data_for(workload)
         if s.warmstart:
             return warmstart_dwn(jax.random.PRNGKey(s.seed), cfg,
-                                 self.data.x_train, self.data.y_train)
-        return init_dwn(jax.random.PRNGKey(s.seed), cfg, self.data.x_train)
+                                 data.x_train, data.y_train)
+        return init_dwn(jax.random.PRNGKey(s.seed), cfg, data.x_train)
 
     def prepare_models(self, points) -> int:
         """Batch-train the models several grid points share, ahead of the
         per-point loop.
 
-        Points group by (preset, T): members differ only in threshold
-        placement, so their params/buffers are same-shape arrays and a
-        whole group trains as ONE vmapped scan-compiled program
+        Points group by (workload, preset, T): members differ only in
+        threshold placement, so their params/buffers are same-shape
+        arrays and a whole group trains as ONE vmapped scan-compiled
+        program
         (``repro.training.batch.train_dwn_batch``) instead of sequential
         loops.  Groups of one fall through to :meth:`model_for`.
 
@@ -148,21 +166,21 @@ class SweepRunner:
             return 0
         groups: dict[tuple, list] = {}
         for pt in points:
-            key = (pt.preset, pt.bits, pt.placement)
+            key = (pt.workload, pt.preset, pt.bits, pt.placement)
             if key in self._models:
                 continue
-            grp = groups.setdefault((pt.preset, pt.bits), [])
+            grp = groups.setdefault((pt.workload, pt.preset, pt.bits), [])
             if key not in [k for k, _ in grp]:
                 grp.append((key, pt))
         from ..training import train_dwn_batch
         trained = 0
-        for members in groups.values():
+        for (workload, _, _), members in groups.items():
             if len(members) < 2:
                 continue
             cfgs = [self._cfg_for(pt) for _, pt in members]
-            models = [self._init_model(c) for c in cfgs]
+            models = [self._init_model(c, workload) for c in cfgs]
             out = train_dwn_batch(
-                cfgs[0], self.data, epochs=s.train_epochs,
+                cfgs[0], self.data_for(workload), epochs=s.train_epochs,
                 seeds=[s.seed] * len(members), models=models,
                 batch=s.train_batch, lr=s.lr, eval_final=False)
             for (key, _), cfg, res in zip(members, cfgs, out.results):
@@ -172,14 +190,15 @@ class SweepRunner:
 
     def model_for(self, point: SweepPoint):
         """(DWNConfig, params, buffers) for the point's model shape —
-        built once per unique (preset, T, placement)."""
-        key = (point.preset, point.bits, point.placement)
+        built once per unique (workload, preset, T, placement)."""
+        key = (point.workload, point.preset, point.bits, point.placement)
         if key not in self._models:
             s = self.settings
             cfg = self._cfg_for(point)
-            params, buffers = self._init_model(cfg)
+            params, buffers = self._init_model(cfg, point.workload)
             if s.train_epochs > 0:
-                res = train_dwn(cfg, self.data, epochs=s.train_epochs,
+                res = train_dwn(cfg, self.data_for(point.workload),
+                                epochs=s.train_epochs,
                                 batch=s.train_batch, lr=s.lr, seed=s.seed,
                                 params=params, buffers=buffers,
                                 eval_every=0, verbose=False)
@@ -222,9 +241,10 @@ class SweepRunner:
             return inner(x)
 
         fwd = jax.jit(step)
-        n = self.data.x_test.shape[0]
+        data = self.data_for(art.spec.workload)
+        n = data.x_test.shape[0]
         reps = -(-s.kernel_batch // n)             # tile if the split is small
-        x = jnp.asarray(np.tile(self.data.x_test,
+        x = jnp.asarray(np.tile(data.x_test,
                                 (reps, 1))[:s.kernel_batch])
         fwd(x)[1].block_until_ready()              # compile outside timing
         best = float("inf")
@@ -238,8 +258,8 @@ class SweepRunner:
         """(throughput samples/s, p50 compute ms) through the engine —
         the point's own packed artifact is what gets served (PEN points
         serve the quantized datapath, bit-exact vs the oracle)."""
-        key = (point.preset, point.bits, point.placement, point.variant,
-               point.input_bits)
+        key = (point.workload, point.preset, point.bits, point.placement,
+               point.variant, point.input_bits)
         if key not in self._serve:
             from ..serving import ServingEngine
             s = self.settings
@@ -273,10 +293,13 @@ class SweepRunner:
             fmax_mhz=round(rep.fmax_mhz, 1),
             distinct_comparators=rep.distinct_comparators,
             paper_luts=paper,
-            lut_error_pct=lut_error_pct(rep.total_luts, paper))
+            lut_error_pct=lut_error_pct(rep.total_luts, paper),
+            encoder_share=round(rep.luts.get("encoder", 0)
+                                / max(rep.total_luts, 1), 4))
         if s.accuracy:
+            data = self.data_for(point.workload)
             res.accuracy = eval_accuracy_hard_packed(
-                art.frozen, self.data.x_test, self.data.y_test)
+                art.frozen, data.x_test, data.y_test)
         if s.kernel:
             res.kernel_us = round(self._time_kernel(art), 1)
             res.kernel_batch = s.kernel_batch

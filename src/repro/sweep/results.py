@@ -41,6 +41,7 @@ class PointResult:
     distinct_comparators: int = 0
     paper_luts: int | None = None
     lut_error_pct: float | None = None
+    encoder_share: float | None = None        # encoder LUTs / total LUTs
     kernel_us: float | None = None            # fused packed kernel, per batch
     kernel_batch: int | None = None
     serve_throughput: float | None = None     # samples/s through the engine
@@ -111,14 +112,14 @@ class SweepResult:
 
     def table(self) -> str:
         """Markdown table over every point (the sweep's printed artifact)."""
-        head = ("| point | acc | LUT total | enc | lut | pop | argmax "
+        head = ("| point | acc | LUT total | enc | enc% | lut | pop | argmax "
                 "| paper | err% | kernel µs | serve/s |\n"
-                "|---|---|---|---|---|---|---|---|---|---|---|")
+                "|---|---|---|---|---|---|---|---|---|---|---|---|")
         rows = []
         for r in self.points:
             if r.failed:
                 rows.append(f"| {r.point.label} | FAILED ({r.error}) "
-                            + "| - " * 9 + "|")
+                            + "| - " * 10 + "|")
                 continue
             acc = f"{r.accuracy:.3f}" if r.accuracy is not None else "-"
             err = (f"{r.lut_error_pct:+.1f}"
@@ -126,9 +127,12 @@ class SweepResult:
             ker = f"{r.kernel_us:.0f}" if r.kernel_us is not None else "-"
             srv = (f"{r.serve_throughput:.0f}"
                    if r.serve_throughput is not None else "-")
+            share = (f"{100 * r.encoder_share:.1f}"
+                     if r.encoder_share is not None else "-")
             rows.append(
                 f"| {r.point.label} | {acc} | {r.total_luts} "
-                f"| {r.luts.get('encoder', 0)} | {r.luts.get('lut_layer', 0)} "
+                f"| {r.luts.get('encoder', 0)} | {share} "
+                f"| {r.luts.get('lut_layer', 0)} "
                 f"| {r.luts.get('popcount', 0)} | {r.luts.get('argmax', 0)} "
                 f"| {r.paper_luts or '-'} | {err} | {ker} | {srv} |")
         return "\n".join([head] + rows)

@@ -1,0 +1,13 @@
+"""Workload registry: every dataset the stack trains/serves/sweeps on.
+
+See :mod:`repro.workloads.base` for the registry API and
+``docs/workloads.md`` for how to add a dataset.
+"""
+
+from .base import (Workload, get_workload, list_workloads, load_workload,
+                   register_workload)
+
+__all__ = [
+    "Workload", "get_workload", "list_workloads", "load_workload",
+    "register_workload",
+]

@@ -1,0 +1,120 @@
+"""Typed workload registry: name -> loader + feature schema + presets.
+
+A :class:`Workload` bundles everything the rest of the stack needs to
+know about a dataset — feature count, class count, the canonical
+train/eval loader (seeded, deterministic, with a synthetic fallback so
+CI never downloads), and the DWN preset tiers that make sense at that
+feature/class geometry.  ``data/jsc.py`` migrates behind the registry as
+the first entry; MNIST and the LM-backbone feature workload ride on top.
+
+Every consumer that used to hardcode JSC (the sweep runner, the serving
+engine, the cosim default-vector path, the launch CLIs) now resolves its
+dataset through :func:`get_workload` / :func:`load_workload`, so adding
+a dataset is one module registering one ``Workload`` — no per-subsystem
+edits.
+
+Loaders return a duck-typed split object with ``x_train`` / ``y_train``
+/ ``x_test`` / ``y_test`` arrays: float32 features normalized to
+[-1, 1) with train-split statistics (what the thermometer encoder
+expects) and int32 labels.  ``repro.data.jsc.JSCData`` is the reference
+shape; all loaders here reuse it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from ..core.model import DWNConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One registered dataset/workload.
+
+    Attributes:
+      name: registry key (``"jsc"`` | ``"mnist"`` | ``"lm-head"`` | ...).
+      num_features: feature count F the encoder sees.
+      num_classes: label count C (constrains ``lut_counts[-1] % C == 0``).
+      loader: ``(n_train, n_test, seed) -> split`` with x_train/y_train/
+        x_test/y_test; deterministic per arguments, never downloads
+        unless the workload module says real data is available.
+      presets: tier name -> base :class:`DWNConfig` (the per-workload
+        analogue of ``JSC_PRESETS``); specs pick ``bits``/``placement``
+        on top of these.
+      description: one-line provenance / synthetic-fallback note.
+      backbone: arch name of a feature-extractor backbone, when features
+        are produced by a model rather than read from disk (the LM-head
+        workload); None for plain datasets.
+      cap_train / cap_test: optional hard caps on split sizes (backbone
+        workloads cap how much they will run the extractor for); loaders
+        receive the capped sizes.
+    """
+
+    name: str
+    num_features: int
+    num_classes: int
+    loader: Callable
+    presets: dict[str, DWNConfig]
+    description: str = ""
+    backbone: str | None = None
+    cap_train: int | None = None
+    cap_test: int | None = None
+
+    def load(self, n_train: int, n_test: int, seed: int = 0):
+        """The canonical split (applies the workload's size caps)."""
+        if self.cap_train is not None:
+            n_train = min(n_train, self.cap_train)
+        if self.cap_test is not None:
+            n_test = min(n_test, self.cap_test)
+        return self.loader(n_train, n_test, seed)
+
+
+_REGISTRY: dict[str, Workload] = {}
+
+
+def register_workload(wl: Workload) -> Workload:
+    """Register a workload (idempotent per name; re-registering the same
+    name is an error — pick a new name for a variant)."""
+    assert wl.name not in _REGISTRY, f"workload {wl.name!r} already registered"
+    for tier, cfg in wl.presets.items():
+        assert cfg.num_features == wl.num_features, (wl.name, tier)
+        assert cfg.num_classes == wl.num_classes, (wl.name, tier)
+    _REGISTRY[wl.name] = wl
+    return wl
+
+
+def _ensure_loaded() -> None:
+    # workload modules self-register on import, mirroring configs.registry
+    from . import jsc, lm_head, mnist  # noqa: F401
+
+
+def get_workload(name: str) -> Workload:
+    """Resolve a registered workload by name.
+
+    Raises ``KeyError`` listing the known names — the error every CLI
+    surfaces for a bad ``--workload``.
+    """
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown workload {name!r}; registered workloads: "
+            f"{sorted(_REGISTRY)} (register new ones via "
+            f"repro.workloads.register_workload)")
+    return _REGISTRY[name]
+
+
+def list_workloads() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def load_workload(name: str, n_train: int, n_test: int, seed: int = 0):
+    """One-call split loader: ``get_workload(name).load(...)``."""
+    return get_workload(name).load(n_train, n_test, seed)
+
+
+__all__ = [
+    "Workload", "get_workload", "list_workloads", "load_workload",
+    "register_workload",
+]

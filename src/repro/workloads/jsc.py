@@ -1,0 +1,32 @@
+"""JSC as a registry workload — the migration target of ``data/jsc.py``.
+
+The loader delegates *directly* to :func:`repro.data.jsc.load_jsc`, so
+splits obtained through the registry are byte-exact with the legacy
+loader (tested in ``tests/test_workloads.py``): same master-seeded
+ground truth, same per-seed sampling, same train-stat normalization.
+The preset tiers are ``JSC_PRESETS`` verbatim (Table I model sizes).
+"""
+
+from __future__ import annotations
+
+from ..core.model import JSC_PRESETS
+from ..data.jsc import NUM_CLASSES, NUM_FEATURES, load_jsc
+from .base import Workload, register_workload
+
+
+def _load(n_train: int, n_test: int, seed: int = 0):
+    return load_jsc(n_train, n_test, seed=seed)
+
+
+JSC = register_workload(Workload(
+    name="jsc",
+    num_features=NUM_FEATURES,
+    num_classes=NUM_CLASSES,
+    loader=_load,
+    presets=dict(JSC_PRESETS),
+    description=("Jet Substructure Classification surrogate (16 features, "
+                 "5 jet classes; seeded synthetic stand-in for Duarte et "
+                 "al. 2018, see repro.data.jsc)"),
+))
+
+__all__ = ["JSC"]

@@ -57,7 +57,7 @@ def test_spec_rejects_pen_ten_mismatch():
 
 
 def test_spec_rejects_unknown_preset_variant_grouping():
-    with pytest.raises(ValueError, match="known JSC tiers"):
+    with pytest.raises(ValueError, match="workload 'jsc'.*known tiers"):
         DWNSpec(preset="xl-9000")
     with pytest.raises(ValueError, match="unknown encoding variant"):
         DWNSpec(preset="sm-50", variant="BEN")

@@ -150,19 +150,25 @@ def _all_preset_sources():
     """Emit RTL for every registered spec preset x {TEN, PEN} x placement,
     memoizing the expensive fit per unique (tier, T, placement)."""
     from repro.core.thermometer import PLACEMENTS
-    from repro.data.jsc import load_jsc
     from repro.dwn import DWNArtifact
     from repro.dwn.spec import get_spec, spec_presets
+    from repro.workloads import load_workload
 
-    data = load_jsc(256, 16, seed=0)
+    splits: dict = {}
+
+    def data_for(workload):
+        if workload not in splits:
+            splits[workload] = load_workload(workload, 256, 16, seed=0)
+        return splits[workload]
+
     trained: dict = {}
     frozen: dict = {}
 
     def art_for(spec):
-        tkey = (spec.preset, spec.bits, spec.placement)
+        tkey = (spec.workload, spec.preset, spec.bits, spec.placement)
         if tkey not in trained:
             ten = dataclasses.replace(spec, variant="TEN", input_bits=None)
-            a = DWNArtifact(ten).fit(data.x_train, seed=0)
+            a = DWNArtifact(ten).fit(data_for(spec.workload).x_train, seed=0)
             trained[tkey] = (a.params, a.buffers)
         fkey = tkey + (spec.variant,)
         if fkey not in frozen:
